@@ -1,0 +1,94 @@
+"""Shared benchmark helpers: datasets, train+eval, timing, CSV rows."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import BASELINES, baco_build, build_sketch
+from repro.core import metrics as M
+from repro.data import paperlike_dataset
+from repro.training import Trainer, TrainConfig
+
+__all__ = ["get_dataset", "train_eval", "sketch_for", "cluster_metrics",
+           "Row", "timed"]
+
+
+@functools.lru_cache(maxsize=8)
+def get_dataset(name: str, seed: int = 0):
+    return paperlike_dataset(name, seed=seed)
+
+
+def sketch_for(method: str, graph, ratio: float = 0.25, d: int = 64,
+               seed: int = 0):
+    """None for 'full', else a Sketch from the registry / baco."""
+    if method == "full":
+        return None
+    if method == "baco":
+        return baco_build(graph, d=d, ratio=ratio)
+    if method == "baco_no_scu":
+        return baco_build(graph, d=d, ratio=ratio, scu=False)
+    return build_sketch(method, graph, budget=int(ratio * graph.n_nodes),
+                        seed=seed)
+
+
+def train_eval(graph, sketch, test_edges, *, steps: int = 400, d: int = 64,
+               batch: int = 2048, lr: float = 5e-3, seed: int = 0,
+               max_users: int = 2000):
+    cfg = TrainConfig(dim=d, steps=steps, batch_size=batch, lr=lr, seed=seed)
+    tr = Trainer(graph, sketch, cfg)
+    t0 = time.time()
+    tr.run(log_every=0)
+    train_s = time.time() - t0
+    m = tr.evaluate(test_edges, max_users=max_users)
+    m["train_s"] = train_s
+    m["params"] = tr.n_params()
+    return m, tr
+
+
+def cluster_metrics(graph, sketch):
+    """Gini / ACCL / intra-edge stats. Uses the SHARED-id-space labels
+    when the method kept them (per-side compaction loses cross-side
+    co-membership; hashing methods genuinely have none)."""
+    lu = sketch.user_idx[:, 0].astype(np.int64)
+    lv = sketch.item_idx[:, 0].astype(np.int64) + sketch.k_users
+    if sketch.meta and "joint_labels" in sketch.meta:
+        labels = np.asarray(sketch.meta["joint_labels"], np.int32)
+    else:
+        labels = np.concatenate([lu, lv]).astype(np.int32)
+    sizes = M.cluster_sizes(labels)
+    return {
+        "gini_all": M.gini(sizes),
+        "gini_users": M.gini(M.cluster_sizes(lu)),
+        "gini_items": M.gini(M.cluster_sizes(lv - sketch.k_users)),
+        "accl": M.accl(graph, labels),
+        "intra_frac": M.intra_edges(graph, labels) / max(graph.n_edges, 1),
+        "k_users": sketch.k_users, "k_items": sketch.k_items,
+    }
+
+
+class Row:
+    """CSV row accumulator: name,us_per_call,derived."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, **derived):
+        d = ";".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                     for k, v in derived.items())
+        self.rows.append((name, us_per_call, d))
+        print(f"{name},{us_per_call:.1f},{d}", flush=True)
+        return self
+
+    def emit(self):
+        return self.rows
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeats

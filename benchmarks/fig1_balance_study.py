@@ -1,0 +1,26 @@
+"""Figure 1 analogue: cross-cluster links (ACCL) + Gini coefficients per
+method — the empirical study motivating BACO's two objectives."""
+from __future__ import annotations
+
+from benchmarks.common import Row, cluster_metrics, get_dataset, sketch_for
+
+METHODS = ["random", "frequency", "lp", "louvain_modularity", "scc", "sbc",
+           "baco_no_scu", "baco"]
+
+
+def run(fast: bool = True):
+    rows = Row()
+    ds = "gowalla_s" if fast else "gowalla"
+    _, _, _, train, _ = get_dataset(ds)
+    for m in METHODS:
+        import time
+        t0 = time.time()
+        sk = sketch_for(m, train)
+        dt = time.time() - t0
+        cm = cluster_metrics(train, sk)
+        rows.add(f"fig1/{ds}/{m}", dt * 1e6, **cm)
+    return rows.emit()
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -1,0 +1,282 @@
+"""Post-SPMD HLO analyzer: exact per-device FLOPs / bytes / collectives.
+
+Why not compiled.cost_analysis()? XLA's HloCostAnalysis visits every
+computation ONCE — a lax.scan over 61 transformer blocks reports 1/61 of
+the real FLOPs. The compiled HLO, however, annotates every while loop
+with backend_config known_trip_count, so we recover exact execution
+counts by walking the call graph (ENTRY -> while bodies x trip, fusions,
+conditionals) and scale every op by its multiplier.
+
+All shapes in compiled.as_text() are PER-DEVICE (post-partitioning), so
+every number reported here is per-chip — exactly what the roofline terms
+need:
+    compute   = dot_flops / peak_flops_chip
+    memory    = hbm_bytes / hbm_bw          (top-level operand+output bytes)
+    collective= coll_bytes / link_bw        (operand bytes of all-gather /
+                all-reduce / reduce-scatter / all-to-all / collective-permute)
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo_text", "analyze_compiled"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+# HBM-traffic ops: fusion boundaries a TPU-like compiler would materialize.
+# Top-level elementwise/broadcast/select ops in the CPU HLO would fuse into
+# neighbors on TPU, so counting them triple-counts the same buffer.
+_BYTES_OPS = ("fusion", "dot", "convolution", "gather", "scatter",
+              "dynamic-slice", "dynamic-update-slice", "copy",
+              "concatenate", "pad", "reduce", "sort", "slice", "transpose",
+              "reduce-window", "select-and-scatter", "rng", "cholesky",
+              "triangular-solve", "fft", "custom-call")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Bytes of one (possibly tuple) shape string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+class _Op:
+    __slots__ = ("name", "shape", "kind", "operands", "attrs")
+
+    def __init__(self, name, shape, kind, operands, attrs):
+        self.name = name
+        self.shape = shape
+        self.kind = kind
+        self.operands = operands
+        self.attrs = attrs
+
+
+# shape group: tuple shapes may contain /*index=5*/ comments -> use a
+# lazy dot-match up to the closing paren (HLO never nests parens in shapes)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+"
+    r"([\w\-]+)(?:\(|\.\()(.*)$")
+
+
+def _join_wrapped_lines(text: str) -> List[str]:
+    """HLO pretty-printer wraps long ops (big tuple shapes — e.g. the
+    bundled DP-gradient all-reduce) across lines; rejoin continuations."""
+    out: List[str] = []
+    for raw in text.splitlines():
+        s = raw.strip()
+        if not s:
+            continue
+        if (out and not (s.startswith("%") or s.startswith("ROOT")
+                         or s.startswith("ENTRY") or s == "}"
+                         or s.startswith("HloModule"))):
+            out[-1] += " " + s
+        else:
+            out.append(raw.rstrip())
+    return out
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    cur = None
+    for line in _join_wrapped_lines(text):
+        s = line.strip()
+        if not s:
+            continue
+        # computation header: `%name (params) -> type {` or `ENTRY ...`
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = re.search(r"%([\w\.\-]+)", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, shape, kind, rest = m.groups()
+        # operand names (only at call position, before attrs)
+        paren_depth = 1
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                paren_depth += 1
+            elif ch == ")":
+                paren_depth -= 1
+                if paren_depth == 0:
+                    end = i
+                    break
+        operand_str = rest[:end]
+        attrs = rest[end + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", operand_str)
+        comps[cur].append(_Op(name, shape, kind, operands, attrs))
+    return comps
+
+
+def _trip_count(attrs: str) -> float:
+    m = re.search(r'known_trip_count[^0-9]*?"n":"(\d+)"', attrs)
+    if m:
+        return float(m.group(1))
+    m = re.search(r"trip_count=(\d+)", attrs)
+    if m:
+        return float(m.group(1))
+    return 1.0       # unknown loop: count body once (lower bound)
+
+
+def _called_comps(op: _Op) -> List[Tuple[str, float]]:
+    """(computation, multiplier) pairs invoked by this op."""
+    out = []
+    if op.kind == "while":
+        body = re.search(r"body=%([\w\.\-]+)", op.attrs)
+        cond = re.search(r"condition=%([\w\.\-]+)", op.attrs)
+        n = _trip_count(op.attrs)
+        if body:
+            out.append((body.group(1), n))
+        if cond:
+            out.append((cond.group(1), n + 1))
+    elif op.kind == "conditional":
+        for m in re.finditer(r"%([\w\.\-]+)", op.attrs):
+            if "computation" in op.attrs:
+                pass
+        for m in re.finditer(
+                r"(?:branch_computations=\{([^}]*)\}|"
+                r"true_computation=%([\w\.\-]+)|"
+                r"false_computation=%([\w\.\-]+))", op.attrs):
+            for g in m.groups():
+                if g:
+                    for c in re.findall(r"%?([\w\.\-]+)", g):
+                        out.append((c, 1.0))
+    else:
+        m = re.search(r"(?:calls|to_apply)=%([\w\.\-]+)", op.attrs)
+        if m:
+            out.append((m.group(1), 1.0))
+    return out
+
+
+def _dot_flops(op: _Op, shapes: Dict[str, str]) -> float:
+    """2 * prod(output dims) * prod(lhs contracting dims)."""
+    out = _shape_dims(op.shape)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    lhs_shape = shapes.get(op.operands[0]) if op.operands else None
+    if lhs_shape is None:
+        return 0.0
+    parsed = _shape_dims(lhs_shape)
+    if parsed is None:
+        return 0.0
+    _, lhs_dims = parsed
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    return 2.0 * math.prod(out_dims or [1]) * contract
+
+
+def analyze_hlo_text(text: str) -> Dict[str, float]:
+    comps = _parse_computations(text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    # shape table across all computations (names are module-unique)
+    shapes: Dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            shapes[op.name] = op.shape
+    # execution multipliers via call-graph walk
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_internal = set()
+    stack = [("__entry__", 1.0)]
+    seen_pairs = set()
+    while stack:
+        comp, m = stack.pop()
+        if comp not in comps or (comp, m) in seen_pairs:
+            continue
+        seen_pairs.add((comp, m))
+        mult[comp] += m
+        for op in comps[comp]:
+            for callee, k in _called_comps(op):
+                if callee in comps:
+                    if op.kind == "fusion":
+                        fusion_internal.add(callee)
+                    stack.append((callee, m * k))
+
+    metrics = defaultdict(float)
+    # note: "__entry__" aliases the real entry computation's op list; the
+    # real name keeps mult 0 (never re-walked), so entry ops count ONCE
+    # through the alias.
+    for comp, ops in comps.items():
+        if comp in fusion_internal:
+            continue
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        for op in ops:
+            if op.kind in ("dot", "convolution"):
+                metrics["dot_flops"] += m * _dot_flops(op, shapes)
+            is_coll = any(op.kind.startswith(c) for c in _COLLECTIVES)
+            if is_coll:
+                base = op.kind.replace("-start", "").replace("-done", "")
+                if op.kind.endswith("-done"):
+                    continue     # counted at -start
+                b = sum(_shape_bytes(shapes.get(o, "")) for o in op.operands)
+                metrics[f"coll_bytes/{base}"] += m * b
+                metrics["coll_bytes_total"] += m * b
+            if not any(op.kind == b or op.kind.startswith(b + ".")
+                       for b in _BYTES_OPS):
+                continue
+            # HBM traffic estimate: fusion-boundary operand + output bytes
+            ob = sum(_shape_bytes(shapes.get(o, "")) for o in op.operands)
+            metrics["hbm_bytes"] += m * (ob + _shape_bytes(op.shape))
+    # entry: also count fusion-internal dot flops (fusions may contain dots)
+    for comp in fusion_internal:
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        for op in comps[comp]:
+            if op.kind in ("dot", "convolution"):
+                metrics["dot_flops"] += m * _dot_flops(op, shapes)
+    return dict(metrics)
+
+
+def analyze_compiled(compiled) -> Dict[str, float]:
+    out = analyze_hlo_text(compiled.as_text())
+    try:
+        ca = compiled.cost_analysis() or {}
+        out["xla_flops_once"] = float(ca.get("flops", -1.0))
+        out["xla_bytes_once"] = float(ca.get("bytes accessed", -1.0))
+    except Exception:
+        pass
+    return out

@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle wall-time on
+CPU is NOT a TPU signal — this bench exists to (a) exercise every kernel
+at paper-relevant shapes, (b) report the arithmetic-intensity numbers the
+TPU roofline uses (bytes moved vs FLOPs), derived analytically."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels import ops, ref
+
+
+def run(fast: bool = True):
+    rows = Row()
+    rng = np.random.default_rng(0)
+
+    # codebook lookup: K=26k (gowalla 1/4 budget), d=64, 2-hot
+    k, d, b = (8192, 64, 1024) if fast else (32768, 64, 8192)
+    cb = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, k, (b, 2)), jnp.int32)
+    out, dt = _timeit(lambda: ops.codebook_lookup(cb, idx))
+    bytes_moved = b * (2 * d * 4 + d * 4 + 8)
+    rows.add("kernel/codebook_lookup", dt * 1e6,
+             gb_moved=bytes_moved / 1e9,
+             intensity_flops_per_byte=(b * d) / bytes_moved)
+
+    # embedding bag: dlrm-ish
+    n, nnz, nseg = (20000, 4096, 512) if fast else (200000, 65536, 8192)
+    table = jnp.asarray(rng.standard_normal((n, 128)), jnp.float32)
+    vals = jnp.asarray(rng.integers(0, n, nnz), jnp.int32)
+    segs = jnp.asarray(np.sort(rng.integers(0, nseg, nnz)), jnp.int32)
+    out, dt = _timeit(lambda: ops.embedding_bag(table, vals, segs, nseg))
+    rows.add("kernel/embedding_bag", dt * 1e6,
+             gb_moved=(nnz * 128 * 4 + nseg * 128 * 4) / 1e9)
+
+    # dot interaction: DLRM (F=27, d=128)
+    bsz = 256 if fast else 2048
+    x = jnp.asarray(rng.standard_normal((bsz, 27, 128)), jnp.float32)
+    out, dt = _timeit(lambda: ops.dot_interaction(x, block_b=128))
+    rows.add("kernel/dot_interaction", dt * 1e6,
+             gflops=2 * bsz * 27 * 27 * 128 / 1e9)
+
+    # flash attention: train-ish tile
+    b2, h, s, dh = (1, 2, 512, 64) if fast else (2, 8, 2048, 128)
+    q = jnp.asarray(rng.standard_normal((b2, h, s, dh)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((b2, h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b2, h, s, dh)), jnp.float32)
+    out, dt = _timeit(lambda: ops.flash_attention(q, kk, v, causal=True))
+    rows.add("kernel/flash_attention", dt * 1e6,
+             gflops=2 * 2 * b2 * h * s * s * dh / 2 / 1e9)
+    # correctness cross-check rides along
+    err = float(jnp.abs(out - ref.mha(q, kk, v, causal=True)).max())
+    rows.add("kernel/flash_attention_maxerr", 0.0, max_abs_err=err)
+    return rows.emit()
+
+
+def _timeit(fn):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.time()
+    out = fn()
+    jax.block_until_ready(out)
+    return out, time.time() - t0
+
+
+if __name__ == "__main__":
+    run(fast=True)

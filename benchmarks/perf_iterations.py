@@ -1,0 +1,146 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> re-analyse.
+
+Three cells (chosen per the brief from the baseline roofline table):
+  * kimi-k2-1t-a32b:train_4k   — most collective-bound cell
+  * gemma3-12b:train_4k        — worst roofline fraction of the big
+                                 compute cells (TP-16 all-reduce tax)
+  * dlrm-mlperf:train_batch    — most representative of the paper
+                                 (embedding tables; BACO applies directly)
+
+Each iteration is a config/sharding variant of the SAME physical mesh;
+the script lowers+compiles each and prints the three roofline terms.
+Run:  PYTHONPATH=src python -m benchmarks.perf_iterations [--cell N]
+(needs the 512-device XLA flag: the script sets it first.)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def _run_variant(arch_id, shape_name, label, cfg_update=None,
+                 dims_update=None):
+    from repro.configs import get_arch
+    from repro.configs.registry import ArchSpec, ShapeSpec
+    from repro.launch.dryrun import run_cell
+    from repro.launch import steps
+    from benchmarks.roofline import roofline_terms
+
+    spec = get_arch(arch_id)
+    shape = spec.shape(shape_name)
+    if dims_update:
+        shape = ShapeSpec(shape.name, shape.kind,
+                          {**shape.dims, **dims_update}, shape.skip)
+
+    def override(mesh):
+        cfg = spec.full_config()
+        if cfg_update:
+            cfg = dataclasses.replace(cfg, **cfg_update)
+        sp2 = dataclasses.replace(
+            spec, full_config=lambda c=cfg: c,
+            shapes=(shape,) + tuple(s for s in spec.shapes
+                                    if s.name != shape.name))
+        return steps._FAMILY[spec.family](sp2, shape, mesh, False)
+
+    rec = run_cell(arch_id, shape_name, verbose=False,
+                   override_cell=override)
+    if rec["ok"] is not True:
+        print(f"  {label:34s} FAILED: {rec.get('error')}")
+        return rec
+    t = roofline_terms(rec)
+    ma = rec.get("memory_analysis", {})
+    print(f"  {label:34s} comp={t['compute_s']:8.3f}s "
+          f"mem={t['memory_s']:8.3f}s coll={t['collective_s']:9.3f}s "
+          f"[{t['bottleneck']:>10s}] useful={t['useful_ratio']:.2f} "
+          f"temp={ma.get('temp_size_in_bytes', 0)/1e9:.1f}GB "
+          f"arg={ma.get('argument_size_in_bytes', 0)/1e9:.1f}GB")
+    rec["label"] = label
+    rec["terms"] = t
+    return rec
+
+
+def cell_kimi():
+    print("\n=== kimi-k2-1t-a32b:train_4k (collective-bound) ===")
+    out = []
+    out.append(_run_variant(
+        "kimi-k2-1t-a32b", "train_4k", "it0: gspmd scatter dispatch",
+        cfg_update={"moe_impl": "gspmd"}))
+    out.append(_run_variant(
+        "kimi-k2-1t-a32b", "train_4k", "it1: shard_map local dispatch"))
+    out.append(_run_variant(
+        "kimi-k2-1t-a32b", "train_4k", "it2: it1 + microbatches 8->4",
+        dims_update={"microbatches": 4}))
+    out.append(_run_variant(
+        "kimi-k2-1t-a32b", "train_4k", "it3: it1 + microbatches 8->2",
+        dims_update={"microbatches": 2}))
+    return out
+
+
+def cell_gemma3():
+    print("\n=== gemma3-12b:train_4k (TP all-reduce tax) ===")
+    out = []
+    out.append(_run_variant(
+        "gemma3-12b", "train_4k", "it0: TP16 mapping (baseline)"))
+    out.append(_run_variant(
+        "gemma3-12b", "train_4k", "it1: pure-DP mapping, micro=8",
+        dims_update={"mapping": "dp"}))
+    out.append(_run_variant(
+        "gemma3-12b", "train_4k", "it2: pure-DP mapping, micro=1",
+        dims_update={"mapping": "dp", "microbatches": 1}))
+    out.append(_run_variant(
+        "gemma3-12b", "train_4k", "it3: pure-DP mapping, micro=2",
+        dims_update={"mapping": "dp", "microbatches": 2}))
+    return out
+
+
+def cell_qwen():
+    print("\n=== qwen1.5-32b:train_4k (generalizing the DP mapping) ===")
+    out = []
+    out.append(_run_variant(
+        "qwen1.5-32b", "train_4k", "it0: TP16 mapping (baseline)"))
+    out.append(_run_variant(
+        "qwen1.5-32b", "train_4k", "it1: FSDP-DP mapping, micro=1",
+        dims_update={"mapping": "dp", "microbatches": 1}))
+    return out
+
+
+def cell_dlrm():
+    print("\n=== dlrm-mlperf:train_batch (the paper's technique) ===")
+    out = []
+    out.append(_run_variant(
+        "dlrm-mlperf", "train_batch", "it0: full tables (188M rows)"))
+    out.append(_run_variant(
+        "dlrm-mlperf-baco", "train_batch", "it1: BACO codebooks ratio 1/4"))
+    out.append(_run_variant(
+        "dlrm-mlperf-baco", "train_batch", "it2: BACO codebooks ratio 1/8",
+        cfg_update={"etc_ratio": 0.125}))
+    return out
+
+
+CELLS = {"kimi": cell_kimi, "gemma3": cell_gemma3, "dlrm": cell_dlrm,
+         "qwen": cell_qwen}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    ap.add_argument("--out", default="perf_iterations.json")
+    args = ap.parse_args(argv)
+    results = []
+    for name, fn in CELLS.items():
+        if args.cell and name != args.cell:
+            continue
+        results.extend(r for r in fn() if r)
+    with open(args.out, "w") as f:
+        json.dump([{k: v for k, v in r.items() if k != "traceback"}
+                   for r in results], f, indent=1, default=str)
+    print(f"\nwrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,197 @@
+"""Roofline analysis (deliverable g): derive compute / memory / collective
+terms per (arch x shape) from the dry-run artifacts.
+
+  compute    = dot_flops_per_dev / 197e12        (TPU v5e bf16 peak)
+  memory     = hbm_bytes_per_dev / 819e9         (HBM bandwidth)
+  collective = coll_bytes_per_dev / 50e9         (ICI per-link)
+
+All three inputs come from benchmarks/hlo_analysis.py (per-device,
+trip-count-exact). MODEL_FLOPS uses the 6*N*D rule (dense) or
+6*N_active*D (MoE); the MODEL/HLO ratio surfaces remat/redundancy waste.
+
+Usage:
+  python -m benchmarks.roofline --results dryrun_single_pod.json
+  python -m benchmarks.roofline --cell gemma2-9b:train_4k   (live lower)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s ICI
+
+__all__ = ["roofline_terms", "model_flops", "print_table"]
+
+
+def model_flops(arch_id: str, shape_name: str, kind: str) -> float:
+    """Analytic 6*N*D (N = active non-embedding params, D = tokens) for
+    LMs; dense-layer dominated analytic counts for the other families.
+    GLOBAL flops (divide by chips for per-device)."""
+    from repro.configs import get_arch
+    from repro.models import transformer as T
+    from repro.models import recsys as R
+    spec = get_arch(arch_id)
+    cfg = spec.full_config()
+    dims = spec.shape(shape_name).dims
+    if spec.family == "lm":
+        d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+        per_layer = (2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd
+                     + cfg.n_heads * cfg.hd * d)
+        if cfg.moe:
+            per_layer += 3 * cfg.moe.top_k * d * f
+        else:
+            per_layer += 3 * d * f
+        n_active = cfg.n_layers * per_layer
+        n_embed_out = d * v
+        tokens = dims["global_batch"] * (dims["seq_len"]
+                                         if kind in ("train", "prefill")
+                                         else 1)
+        mult = 3 if kind == "train" else 1      # fwd + bwd(2x)
+        flops = 2 * n_active * tokens * mult
+        flops += 2 * n_embed_out * tokens * mult   # lm head
+        # attention score/value flops (causal halves)
+        skv = dims["seq_len"]
+        if kind in ("train", "prefill"):
+            n_global = sum(1 for k in cfg.block_pattern if k == "global") \
+                * cfg.n_blocks
+            n_local = cfg.n_layers - n_global
+            att = (2 * 2 * cfg.n_heads * cfg.hd
+                   * (n_global * skv * skv / 2
+                      + n_local * skv * min(cfg.window, skv)))
+            flops += att * dims["global_batch"] * mult
+        else:
+            # decode: per layer KV span = window for local layers
+            n_global = sum(1 for k in cfg.block_pattern if k == "global") \
+                * cfg.n_blocks
+            n_local = cfg.n_layers - n_global
+            span_local = min(cfg.window, skv)
+            flops += (2 * 2 * cfg.n_heads * cfg.hd
+                      * (n_global * skv + n_local * span_local)
+                      * dims["global_batch"])
+        return flops
+    if spec.family == "recsys":
+        b = dims.get("n_candidates", dims.get("batch", 1)) \
+            if kind == "retrieval" else dims["batch"]
+        if isinstance(cfg, R.BERT4RecConfig) or isinstance(cfg, R.SASRecConfig):
+            d, l = cfg.embed_dim, cfg.seq_len
+            per_tok = cfg.n_blocks * (4 * d * d + 2 * 4 * d * d + 2 * l * d)
+            n = 2 * per_tok * dims["batch"] * l
+            if isinstance(cfg, R.BERT4RecConfig) and kind == "train":
+                n += 2 * dims["batch"] * cfg.n_mask * cfg.n_neg * d
+            mult = 3 if kind == "train" else 1
+            return n * mult
+        # dlrm / wide-deep MLP-dominated
+        def mlp_flops(dims_):
+            return sum(2 * i * o for i, o in zip(dims_[:-1], dims_[1:]))
+        if isinstance(cfg, R.DLRMConfig):
+            f1 = mlp_flops((cfg.n_dense,) + cfg.bot_mlp)
+            nint = (cfg.n_sparse + 1)
+            f2 = 2 * nint * nint * cfg.embed_dim
+            f3 = mlp_flops((cfg.bot_mlp[-1] + nint * (nint - 1) // 2,)
+                           + cfg.top_mlp)
+            per = f1 + f2 + f3
+        else:
+            per = mlp_flops((cfg.n_sparse * cfg.embed_dim,) + cfg.mlp + (1,))
+        mult = 3 if kind == "train" else 1
+        return per * b * mult
+    if spec.family == "gnn":
+        d = cfg.d_hidden
+        e = dims.get("n_edges", 64 * dims.get("batch", 1))
+        n = dims.get("n_nodes", 30 * dims.get("batch", 1))
+        per_edge = 2 * (cfg.n_rbf * d + d * d)
+        per_node = 2 * (3 * d * d) + 2 * dims.get("d_feat", 0) * d
+        return (per_edge * e + per_node * n) * cfg.n_interactions * 3
+    return float("nan")
+
+
+def roofline_terms(rec: dict, chips: int = 256) -> dict:
+    """Three terms per device. compute and collective are exact (dot
+    shapes and SPMD-inserted collectives are structural); the memory term
+    is bracketed: upper = fusion-boundary operand+output bytes of the
+    CPU-scheduled HLO (CPU fuses less than TPU -> overcount), lower =
+    XLA cost_analysis bytes x measured loop amplification (assumes
+    TPU-perfect fusion). The mid (geometric mean) drives the bottleneck
+    call; both bounds are reported."""
+    hm = rec.get("hlo_metrics", {})
+    ca = rec.get("cost_analysis", {}) or {}
+    dot = hm.get("dot_flops", 0.0)
+    hbm_hi = hm.get("hbm_bytes", 0.0)
+    coll = hm.get("coll_bytes_total", 0.0)
+    xla_flops_once = hm.get("xla_flops_once") or ca.get("flops", 0.0)
+    xla_bytes_once = hm.get("xla_bytes_once") or ca.get("bytes accessed",
+                                                        0.0)
+    amp = 1.0
+    if xla_flops_once and dot:
+        amp = max(1.0, dot / xla_flops_once)
+    hbm_lo = xla_bytes_once * amp
+    hbm_lo = min(hbm_lo, hbm_hi) if hbm_hi else hbm_lo
+    hbm_mid = math.sqrt(hbm_lo * hbm_hi) if hbm_lo and hbm_hi else hbm_hi
+    t_c = dot / PEAK_FLOPS
+    t_m = hbm_mid / HBM_BW
+    t_x = coll / LINK_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    mf = model_flops(rec["arch"], rec["shape"], rec["kind"])
+    out = {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "memory_lo_s": hbm_lo / HBM_BW, "memory_hi_s": hbm_hi / HBM_BW,
+        "bottleneck": dominant[1],
+        "model_flops_per_dev": mf / chips if mf == mf else float("nan"),
+        "useful_ratio": (mf / chips) / dot if dot and mf == mf else
+        float("nan"),
+        "roofline_frac": t_c / max(t_c, t_m, t_x) if max(t_c, t_m, t_x) > 0
+        else float("nan"),
+    }
+    return out
+
+
+def print_table(results, chips=256):
+    hdr = (f"{'arch':18s} {'shape':14s} {'comp_s':>8s} "
+           f"{'mem_s(lo..hi)':>16s} {'coll_s':>9s} {'bound':>10s} "
+           f"{'useful':>7s} {'roofl%':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    rows = []
+    for rec in results:
+        if rec["ok"] == "skipped":
+            print(f"{rec['arch']:18s} {rec['shape']:14s} "
+                  f"{'skipped: ' + (rec.get('skip') or '')[:48]}")
+            continue
+        if rec["ok"] is not True:
+            print(f"{rec['arch']:18s} {rec['shape']:14s} FAILED")
+            continue
+        t = roofline_terms(rec, chips)
+        rows.append((rec, t))
+        print(f"{rec['arch']:18s} {rec['shape']:14s} "
+              f"{t['compute_s']:8.3f} "
+              f"{t['memory_lo_s']:7.3f}..{t['memory_hi_s']:7.3f} "
+              f"{t['collective_s']:9.3f} {t['bottleneck']:>10s} "
+              f"{t['useful_ratio']:7.2f} {100*t['roofline_frac']:6.1f}%")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_single_pod.json")
+    ap.add_argument("--cell", default=None, help="arch:shape (live lower)")
+    args = ap.parse_args(argv)
+    if args.cell:
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_cell
+        arch, shape = args.cell.split(":")
+        rec = run_cell(arch, shape, verbose=True)
+        print_table([rec])
+        return 0
+    with open(args.results) as f:
+        results = json.load(f)
+    print_table(results)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
+Fast mode (default) uses the small-scale synthetic datasets; --full runs
+the paper-scale ones (slower, same orderings).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "kernel_bench",
+    "fig1_balance_study",
+    "fig2_efficiency",
+    "fig4_convergence",
+    "table4_recall",
+    "fig3_compression_ratio",
+    "table5_weighting",
+    "table6_scu",
+    "table9_distance",
+    "table11_large_scale",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    failures = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(fast=not args.full)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the suite running
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}", flush=True)
+    print(f"# total {time.time()-t_all:.1f}s, {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

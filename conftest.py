@@ -1,0 +1,6 @@
+# Ensures the repo root (for `import benchmarks`) is importable when
+# pytest runs with only PYTHONPATH=src.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

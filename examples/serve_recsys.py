@@ -1,0 +1,55 @@
+"""Serving example: batched top-k recommendation from compressed codebooks
+(2-hot SCU lookups), with latency percentiles. Also demonstrates the
+Pallas fused dual-gather kernel on the serving path.
+
+Run:  PYTHONPATH=src python examples/serve_recsys.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baco_build
+from repro.data import paperlike_dataset
+from repro.training import Trainer, TrainConfig
+from repro.models import lightgcn as L
+from repro.kernels import ops, ref
+
+
+def main():
+    _, _, _, train, test = paperlike_dataset("beauty_s", seed=0)
+    sketch = baco_build(train, d=64, ratio=0.25)
+    tr = Trainer(train, sketch,
+                 TrainConfig(dim=64, steps=300, batch_size=2048, lr=5e-3))
+    tr.run(log_every=0)
+
+    # --- serving loop: batch of user ids -> top-20 items ------------------
+    @jax.jit
+    def serve(params, users):
+        scores = L.score_all_items(params, tr.statics, tr.mcfg, users)
+        return jax.lax.top_k(scores, 20)
+
+    rng = np.random.default_rng(0)
+    lat = []
+    for i in range(30):
+        users = jnp.asarray(rng.integers(0, train.n_users, 64))
+        t0 = time.time()
+        vals, items = serve(tr.params, users)
+        jax.block_until_ready(vals)
+        lat.append((time.time() - t0) * 1e3)
+    lat = np.sort(lat[1:])
+    print(f"serve batch=64: p50={lat[len(lat)//2]:.2f}ms "
+          f"p99={lat[-1]:.2f}ms  top-1 for user0: item {int(items[0, 0])}")
+
+    # --- the same lookup through the Pallas kernel (TPU target) -----------
+    users = jnp.arange(128)
+    idx = jnp.asarray(sketch.user_idx)[users]
+    via_kernel = ops.codebook_lookup(tr.params["user_table"], idx)
+    via_ref = ref.codebook_lookup(tr.params["user_table"], idx)
+    err = float(jnp.abs(via_kernel - via_ref).max())
+    print(f"pallas codebook_lookup matches ref: max|err|={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end driver (deliverable b): train LightGCN with BACO-compressed
+tables for a few hundred steps on a synthetic Gowalla-scale dataset, with
+checkpointing, and compare against the full model + random hashing.
+
+Run:  PYTHONPATH=src python examples/train_lightgcn_baco.py [--steps 600]
+"""
+import argparse
+import tempfile
+
+from repro.core import baco_build, build_sketch
+from repro.data import paperlike_dataset
+from repro.training import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="gowalla_s")
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--ratio", type=float, default=0.25)
+    args = ap.parse_args()
+
+    g, _, _, train, test = paperlike_dataset(args.dataset, seed=0)
+    print(f"dataset {args.dataset}: {train.n_users}x{train.n_items}, "
+          f"{train.n_edges} train edges")
+
+    rows = []
+    for method in ["full", "baco", "random"]:
+        if method == "full":
+            sketch = None
+        elif method == "baco":
+            sketch = baco_build(train, d=args.dim, ratio=args.ratio)
+        else:
+            sketch = build_sketch("random", train,
+                                  budget=int(args.ratio * train.n_nodes))
+        with tempfile.TemporaryDirectory() as ck:
+            cfg = TrainConfig(dim=args.dim, steps=args.steps,
+                              batch_size=2048, lr=5e-3, ckpt_dir=ck,
+                              ckpt_every=200)
+            tr = Trainer(train, sketch, cfg)
+            tr.run(log_every=max(args.steps // 3, 1))
+            m = tr.evaluate(test)
+        rows.append((method, tr.n_params(), m["recall"], m["ndcg"]))
+        print(f"  -> {method}: params={tr.n_params():,} "
+              f"recall@20={m['recall']:.4f} ndcg@20={m['ndcg']:.4f}")
+
+    full = rows[0]
+    print("\nmethod    params      vs_full   recall@20  ndcg@20")
+    for name, p, r, n in rows:
+        print(f"{name:8s} {p:10,}  {p/full[1]*100:6.1f}%   {r:.4f}     "
+              f"{n:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .registry import (ArchSpec, ShapeSpec, all_cells, get_arch, list_archs,
+                       register)
+
+__all__ = ["ArchSpec", "ShapeSpec", "all_cells", "get_arch", "list_archs",
+           "register"]

@@ -1,0 +1,13 @@
+"""BACO core: balanced co-clustering for embedding table compression."""
+from .graph import BipartiteGraph
+from .sketch import Sketch, compact_labels
+from .weights import make_weights, WEIGHT_SCHEMES
+from .baco import baco_build, fit_gamma, secondary_user_labels
+from .baselines import build_sketch, BASELINES
+from . import metrics, solver_jax, solver_numpy
+
+__all__ = [
+    "BipartiteGraph", "Sketch", "compact_labels", "make_weights",
+    "WEIGHT_SCHEMES", "baco_build", "fit_gamma", "secondary_user_labels",
+    "build_sketch", "BASELINES", "metrics", "solver_jax", "solver_numpy",
+]

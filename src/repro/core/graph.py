@@ -1,0 +1,94 @@
+"""Bipartite interaction graph: the substrate BACO clusters over.
+
+Stored as an edge list with both CSR orderings precomputed so the
+side-synchronous LP solver can run gather/segment passes without
+re-sorting. Host-side state is numpy; solvers move what they need to
+device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["BipartiteGraph"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BipartiteGraph:
+    """User-item interaction graph G = (U ∪ V, E).
+
+    Attributes:
+      n_users: |U|
+      n_items: |V|
+      edge_u:  int32[E] user endpoint of each edge, sorted by (u, v)
+      edge_v:  int32[E] item endpoint of each edge, sorted by (u, v)
+      perm_by_item: int32[E] permutation such that edge_v[perm_by_item]
+        is sorted (CSR of the transposed bi-adjacency).
+    """
+
+    n_users: int
+    n_items: int
+    edge_u: np.ndarray
+    edge_v: np.ndarray
+    perm_by_item: np.ndarray
+
+    @staticmethod
+    def from_edges(n_users: int, n_items: int, edge_u, edge_v,
+                   dedup: bool = True) -> "BipartiteGraph":
+        edge_u = np.asarray(edge_u, dtype=np.int64)
+        edge_v = np.asarray(edge_v, dtype=np.int64)
+        if edge_u.shape != edge_v.shape or edge_u.ndim != 1:
+            raise ValueError("edge_u/edge_v must be 1-D and equal length")
+        if edge_u.size and (edge_u.min() < 0 or edge_u.max() >= n_users):
+            raise ValueError("user index out of range")
+        if edge_v.size and (edge_v.min() < 0 or edge_v.max() >= n_items):
+            raise ValueError("item index out of range")
+        key = edge_u * n_items + edge_v
+        if dedup:
+            key = np.unique(key)
+        else:
+            key = np.sort(key)
+        eu = (key // n_items).astype(np.int32)
+        ev = (key % n_items).astype(np.int32)
+        perm = np.argsort(ev, kind="stable").astype(np.int32)
+        return BipartiteGraph(int(n_users), int(n_items), eu, ev, perm)
+
+    # -- basic stats -------------------------------------------------------
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_u.shape[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_users + self.n_items
+
+    def user_degrees(self) -> np.ndarray:
+        return np.bincount(self.edge_u, minlength=self.n_users).astype(np.int64)
+
+    def item_degrees(self) -> np.ndarray:
+        return np.bincount(self.edge_v, minlength=self.n_items).astype(np.int64)
+
+    def density(self) -> float:
+        return self.n_edges / float(max(1, self.n_users) * max(1, self.n_items))
+
+    # -- adjacency views ---------------------------------------------------
+    def user_csr(self):
+        """(indptr, item_indices) neighbor lists per user."""
+        deg = self.user_degrees()
+        indptr = np.zeros(self.n_users + 1, dtype=np.int64)
+        np.cumsum(deg, out=indptr[1:])
+        return indptr, self.edge_v
+
+    def item_csr(self):
+        """(indptr, user_indices) neighbor lists per item."""
+        deg = self.item_degrees()
+        indptr = np.zeros(self.n_items + 1, dtype=np.int64)
+        np.cumsum(deg, out=indptr[1:])
+        return indptr, self.edge_u[self.perm_by_item]
+
+    def biadjacency(self) -> np.ndarray:
+        """Dense {0,1} bi-adjacency B (tests / tiny graphs only)."""
+        b = np.zeros((self.n_users, self.n_items), dtype=np.float32)
+        b[self.edge_u, self.edge_v] = 1.0
+        return b

@@ -1,0 +1,6 @@
+from .synthetic import (synthetic_bipartite, planted_coclusters,
+                        paperlike_dataset, DATASET_PRESETS)
+from .sampler import BPRSampler
+
+__all__ = ["synthetic_bipartite", "planted_coclusters", "paperlike_dataset",
+           "DATASET_PRESETS", "BPRSampler"]

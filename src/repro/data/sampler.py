@@ -1,0 +1,51 @@
+"""BPR triplet sampler with deterministic, checkpointable state.
+
+The sampler's state is (seed, step) only — restoring a checkpoint resumes
+the exact mini-batch stream, which the fault-tolerance test relies on.
+Negatives are sampled uniformly and rejected against the positive item
+only (standard LightGCN protocol); with |V| >> deg this is unbiased enough
+and keeps the sampler O(batch).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import BipartiteGraph
+
+__all__ = ["BPRSampler"]
+
+
+class BPRSampler:
+    def __init__(self, graph: BipartiteGraph, batch_size: int, seed: int = 0):
+        self.n_users = graph.n_users
+        self.n_items = graph.n_items
+        self.edge_u = graph.edge_u
+        self.edge_v = graph.edge_v
+        self.batch_size = int(batch_size)
+        self.seed = int(seed)
+        self.step = 0
+
+    # -- checkpointable state ------------------------------------------------
+    def state_dict(self):
+        return {"seed": self.seed, "step": self.step}
+
+    def load_state_dict(self, s):
+        self.seed = int(s["seed"])
+        self.step = int(s["step"])
+
+    # -- sampling --------------------------------------------------------------
+    def next_batch(self):
+        """(users, pos_items, neg_items) int32[batch] — deterministic in step."""
+        rng = np.random.default_rng((self.seed << 20) + self.step)
+        self.step += 1
+        e = rng.integers(0, self.edge_u.shape[0], size=self.batch_size)
+        users = self.edge_u[e]
+        pos = self.edge_v[e]
+        neg = rng.integers(0, self.n_items, size=self.batch_size)
+        # reject collisions with the sampled positive (cheap re-draw)
+        bad = neg == pos
+        while bad.any():
+            neg[bad] = rng.integers(0, self.n_items, size=int(bad.sum()))
+            bad = neg == pos
+        return (users.astype(np.int32), pos.astype(np.int32),
+                neg.astype(np.int32))

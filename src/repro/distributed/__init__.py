@@ -1,0 +1,5 @@
+from .sharding import (shard, logical_to_spec, current_mesh, named_sharding,
+                       batch_axes)
+
+__all__ = ["shard", "logical_to_spec", "current_mesh", "named_sharding",
+           "batch_axes"]

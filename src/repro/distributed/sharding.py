@@ -1,0 +1,119 @@
+"""Mesh-aware sharding helpers.
+
+Model code calls ``shard(x, *axes)`` with logical axis names per dim;
+under a Mesh context this becomes a sharding constraint, otherwise a
+no-op — so the same model runs on 1 CPU device (tests) and on the
+(pod, data, model) production mesh (dry-run / real launch).
+
+Logical axes under the default "tp" mapping:
+  "batch"  -> ("pod", "data") when the pod axis exists, else "data"
+  "model"  -> "model"   (TP/EP/vocab-row dim)
+  "seq"    -> "model"   only in explicitly sequence-parallel tensors
+  None     -> replicated dim
+
+The PHYSICAL mesh is fixed (16x16 / 2x16x16); the LOGICAL mapping is a
+perf lever (EXPERIMENTS.md §Perf): ``logical_mapping("dp")`` re-targets
+"batch" to every mesh axis and turns "model" constraints off — pure
+data parallelism for models whose weights fit per-chip, eliminating the
+per-layer TP activation all-reduces.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["shard", "logical_to_spec", "current_mesh", "named_sharding",
+           "batch_axes", "logical_mapping", "current_mapping"]
+
+_MAPPING = "tp"      # module-level; set during tracing via logical_mapping
+
+
+@contextlib.contextmanager
+def logical_mapping(mode: str):
+    """Context manager: 'tp' (default) or 'dp' logical-axis mapping."""
+    global _MAPPING
+    if mode not in ("tp", "dp"):
+        raise ValueError(mode)
+    prev = _MAPPING
+    _MAPPING = mode
+    try:
+        yield
+    finally:
+        _MAPPING = prev
+
+
+def current_mapping() -> str:
+    return _MAPPING
+
+
+def current_mesh() -> Optional[Mesh]:
+    m = jax.sharding.get_abstract_mesh() if hasattr(jax.sharding, "get_abstract_mesh") else None
+    try:
+        from jax._src import mesh as mesh_lib
+        env = mesh_lib.thread_resources.env
+        phys = env.physical_mesh
+        if phys is not None and not phys.empty:
+            return phys
+    except Exception:
+        pass
+    return None
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Physical axes implementing the logical batch axis."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def logical_to_spec(mesh: Mesh, axes: Sequence[Optional[str]]) -> P:
+    dp = _MAPPING == "dp"
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif a == "batch":
+            ba = batch_axes(mesh)
+            if dp and "model" in mesh.axis_names:
+                ba = ba + ("model",)
+            out.append(ba if len(ba) > 1 else (ba[0] if ba else None))
+        elif a in ("model", "seq"):
+            if dp:
+                out.append(None)          # no tensor parallelism
+            else:
+                out.append("model" if "model" in mesh.axis_names else None)
+        elif a == "data":
+            out.append("data" if "data" in mesh.axis_names else None)
+        elif a == "vocab":
+            # giant embedding tables: row-shard across the whole pod
+            # (data x model), replicate across pods (lookups stay on ICI)
+            va = tuple(x for x in ("data", "model") if x in mesh.axis_names)
+            out.append(va if len(va) > 1 else (va[0] if va else None))
+        else:
+            raise ValueError(f"unknown logical axis {a!r}")
+    return P(*out)
+
+
+def _in_manual_context() -> bool:
+    """True while tracing inside shard_map (Manual mesh axes) — sharding
+    constraints are invalid there; the body is already per-device."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        return am is not None and any(
+            t == jax.sharding.AxisType.Manual for t in am.axis_types)
+    except Exception:
+        return False
+
+
+def shard(x, *axes: Optional[str]):
+    """Apply a sharding constraint if a mesh is active; identity otherwise."""
+    mesh = current_mesh()
+    if mesh is None or len(mesh.axis_names) == 0 or _in_manual_context():
+        return x
+    spec = logical_to_spec(mesh, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *axes: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, axes))

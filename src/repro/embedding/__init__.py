@@ -1,0 +1,5 @@
+from .tables import (EmbeddingSpec, init_embedding, embed_lookup,
+                     init_codebook, codebook_lookup, embedding_bag)
+
+__all__ = ["EmbeddingSpec", "init_embedding", "embed_lookup",
+           "init_codebook", "codebook_lookup", "embedding_bag"]

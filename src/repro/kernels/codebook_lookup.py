@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused multi-hot codebook lookup (the SCU hot path).
+
+Serving/training retrieves  e_i = Σ_h Z[sketch[i, h]]  for a batch of ids
+(paper §3.2/§4.5: H=1 plain clusters, H=2 with secondary user clusters).
+A naive XLA lowering issues H separate gathers plus an add, touching the
+output twice. This kernel uses scalar-prefetched sketch indices to DMA the
+H codebook rows for each output tile straight into VMEM and writes the
+combined row once.
+
+Layout: the codebook stays in HBM; the grid walks output rows in tiles of
+``rows_per_step``; per grid step the BlockSpec index_map (driven by the
+prefetched indices) pulls exactly the needed codebook rows. The embedding
+dim is the lane dimension (pad to 128 for peak DMA efficiency; any d is
+accepted).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["codebook_lookup_pallas"]
+
+
+def _kernel(idx_ref, *refs, n_hot: int):
+    # refs = (row_ref_0 ... row_ref_{H-1}, out_ref)
+    out_ref = refs[-1]
+    acc = refs[0][...]
+    for h in range(1, n_hot):
+        acc = acc + refs[h][...]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def codebook_lookup_pallas(codebook, idx, *, interpret: bool = True):
+    """codebook [K, d], idx int32 [B, H] -> [B, d].
+
+    One grid step per output row; H codebook-row blocks are prefetched via
+    the scalar idx so the DMA pipeline overlaps fetch h of row i+1 with
+    compute of row i.
+    """
+    b, h = idx.shape
+    k, d = codebook.shape
+
+    in_specs = [
+        pl.BlockSpec((1, d), functools.partial(
+            lambda i, idx_ref, hh: (idx_ref[i, hh], 0), hh=hh))
+        for hh in range(h)
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, n_hot=h),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), codebook.dtype),
+        interpret=interpret,
+    )
+    return fn(idx, *([codebook] * h))

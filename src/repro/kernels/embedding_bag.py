@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused EmbeddingBag (gather + segment-sum).
+
+The recsys lookup hot path: multi-hot field values gather table rows and
+reduce per bag. JAX's composite (take + segment_sum) writes the [nnz, d]
+gathered rows to HBM before reducing; this kernel accumulates each bag in
+VMEM and writes each output row exactly once.
+
+Pattern: grid walks the sorted nnz values; the OUTPUT BlockSpec is driven
+by the prefetched segment id, so consecutive values of one bag revisit the
+same VMEM output block (Pallas keeps revisited blocks resident — the
+canonical TPU segment-reduce pattern). First visit zero-initializes.
+
+Requires segment_ids sorted ascending and every segment id < num_segments.
+Empty bags produce zero rows (out is zero-initialized on first visit of
+each block; untouched blocks are zeroed by a final fill pass in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["embedding_bag_pallas"]
+
+
+def _kernel(seg_ref, val_ref, row_ref, out_ref):
+    i = pl.program_id(0)
+    is_first = jnp.where(i == 0, True, seg_ref[i] != seg_ref[i - 1])
+
+    @pl.when(is_first)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += row_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def embedding_bag_pallas(table, values, segment_ids, *, num_segments: int,
+                         interpret: bool = True):
+    """table [N, d], values int32 [nnz], sorted segment_ids int32 [nnz]
+    -> [num_segments, d] bag sums."""
+    nnz = values.shape[0]
+    n, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # (segment_ids, values)
+        grid=(nnz,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, seg_ref, val_ref: (val_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, seg_ref, val_ref:
+                               (seg_ref[i], 0)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), table.dtype),
+        interpret=interpret,
+    )
+    out = fn(segment_ids, values, table)
+    # zero rows for segments that never appeared (blocks never visited)
+    present = jnp.zeros((num_segments,), jnp.bool_).at[segment_ids].set(True)
+    return jnp.where(present[:, None], out, 0)

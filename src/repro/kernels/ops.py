@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container kernels always run in interpret mode (the TPU is
+the *target*); on a real TPU backend pass interpret=False (the default
+resolves by platform).
+"""
+from __future__ import annotations
+
+import jax
+
+from .codebook_lookup import codebook_lookup_pallas
+from .embedding_bag import embedding_bag_pallas
+from .dot_interaction import dot_interaction_pallas
+from .flash_attention import flash_attention_pallas
+
+__all__ = ["codebook_lookup", "embedding_bag", "dot_interaction",
+           "flash_attention"]
+
+
+def _interpret(override):
+    if override is not None:
+        return override
+    return jax.default_backend() != "tpu"
+
+
+def codebook_lookup(codebook, idx, *, interpret=None):
+    return codebook_lookup_pallas(codebook, idx,
+                                  interpret=_interpret(interpret))
+
+
+def embedding_bag(table, values, segment_ids, num_segments, *,
+                  interpret=None):
+    return embedding_bag_pallas(table, values, segment_ids,
+                                num_segments=num_segments,
+                                interpret=_interpret(interpret))
+
+
+def dot_interaction(x, *, block_b=128, interpret=None):
+    return dot_interaction_pallas(x, block_b=block_b,
+                                  interpret=_interpret(interpret))
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret=None):
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k,
+                                  interpret=_interpret(interpret))

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["codebook_lookup", "embedding_bag", "dot_interaction", "mha"]
+
+
+def codebook_lookup(codebook, idx):
+    """codebook [K, d], idx int32 [B, H] -> [B, d] = Σ_h Z[idx[:, h]]."""
+    return jnp.take(codebook, idx, axis=0).sum(axis=1)
+
+
+def embedding_bag(table, values, segment_ids, num_segments):
+    """table [N, d], values int32 [nnz], sorted segment_ids [nnz] -> [B, d]."""
+    rows = jnp.take(table, values, axis=0)
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+
+
+def dot_interaction(z):
+    """z [B, F, d] -> [B, F(F-1)/2] strictly-lower-triangle of z z^T."""
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)
+    f = z.shape[1]
+    i, j = np.tril_indices(f, k=-1)
+    return inter[:, i, j]
+
+
+def mha(q, k, v, causal=True):
+    """q/k/v [B, H, S, d] -> [B, H, S, d], fp32 softmax accumulation."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(d)
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,2 @@
+# Intentionally empty: repro.launch.dryrun must set XLA_FLAGS before ANY
+# jax-touching import runs, so the package must not import submodules.

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e).
+
+For every assigned (architecture x input shape) cell: build the step
+function + ShapeDtypeStruct inputs with NamedShardings, .lower(),
+.compile() against the production mesh, and record
+  * memory_analysis()  (fits-per-chip proof)
+  * cost_analysis()    (XLA's once-per-computation numbers)
+  * exact per-device dot-FLOPs / HBM bytes / collective bytes from the
+    partitioned HLO (benchmarks/hlo_analysis.py, trip-count scaled)
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+
+The XLA_FLAGS line above MUST run before any other import: jax locks the
+device count at first init, and only the dry-run wants 512 host devices.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+__all__ = ["run_cell", "main"]
+
+
+def _arg_bytes_per_device(args):
+    """Analytic per-device bytes of all inputs (from shardings)."""
+    total = 0
+    for leaf in jax.tree.leaves(args):
+        shape, dtype = leaf.shape, leaf.dtype
+        sharding = getattr(leaf, "sharding", None)
+        import numpy as np
+        n = int(np.prod(shape)) if shape else 1
+        if sharding is not None and hasattr(sharding, "shard_shape") and shape:
+            n = int(np.prod(sharding.shard_shape(shape)))
+        total += n * dtype.itemsize
+    return total
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:            # backend without memory analysis
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, override_cell=None):
+    """Lower+compile one cell on the production mesh; return metrics dict."""
+    from benchmarks.hlo_analysis import analyze_hlo_text
+
+    spec = get_arch(arch_id)
+    shape = spec.shape(shape_name)
+    rec = {"arch": arch_id, "shape": shape_name, "kind": shape.kind,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "skip": shape.skip, "ok": False}
+    if shape.skip is not None:
+        rec["ok"] = "skipped"
+        if verbose:
+            print(f"[dryrun] {arch_id}:{shape_name} SKIPPED ({shape.skip})")
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            cell = (override_cell(mesh) if override_cell
+                    else build_cell(arch_id, shape_name, mesh=mesh))
+            jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        rec["memory_analysis"] = _memory_analysis_dict(compiled)
+        try:
+            ca = compiled.cost_analysis() or {}
+            rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                    if isinstance(v, (int, float))}
+        except Exception as e:
+            rec["cost_analysis"] = {"error": str(e)}
+        rec["hlo_metrics"] = analyze_hlo_text(compiled.as_text())
+        rec["arg_bytes_per_device"] = _arg_bytes_per_device(cell.args)
+        rec["lower_s"] = round(t_lower, 2)
+        rec["compile_s"] = round(t_compile, 2)
+        rec["notes"] = cell.notes
+        rec["ok"] = True
+        if verbose:
+            hm = rec["hlo_metrics"]
+            print(f"[dryrun] {arch_id}:{shape_name} mesh={rec['mesh']} OK "
+                  f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+                  f"dotTF/dev={hm.get('dot_flops', 0)/1e12:.3f} "
+                  f"collGB/dev={hm.get('coll_bytes_total', 0)/1e9:.3f} "
+                  f"argGB/dev={rec['arg_bytes_per_device']/1e9:.3f}")
+            print(f"  memory_analysis: {rec['memory_analysis']}")
+            print(f"  cost_analysis(flops once): "
+                  f"{rec['cost_analysis'].get('flops')}")
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch_id}:{shape_name} FAILED: {rec['error']}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--include-variants", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = all_cells(include_skipped=True,
+                          include_variants=args.include_variants)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for arch_id, shape_name in cells:
+            results.append(run_cell(arch_id, shape_name, multi_pod=mp))
+    n_ok = sum(1 for r in results if r["ok"] is True)
+    n_skip = sum(1 for r in results if r["ok"] == "skipped")
+    n_fail = len(results) - n_ok - n_skip
+    print(f"\n[dryrun] {n_ok} ok / {n_skip} skipped / {n_fail} failed "
+          f"of {len(results)}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

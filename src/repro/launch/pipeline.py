@@ -1,0 +1,192 @@
+"""Pipeline parallelism (GPipe) via shard_map + collective_permute.
+
+The 'model' mesh axis is repurposed as the STAGE axis: each of the 16
+stages holds n_blocks/16 scanned blocks; activations flow stage->stage
+through collective_permute inside a tick loop (n_micro + n_stages - 1
+ticks, the classic GPipe schedule with its bubble). jax.grad through the
+loop yields the reverse pipeline automatically.
+
+Why PP at all: weights STAY PUT (no FSDP per-microbatch regathers — the
+dominant collective cost of the kimi cell), and per-stage activation
+memory is 1/16th. The cost is the bubble: (S-1)/(M+S-1) idle compute.
+
+Scope: dense LMs whose n_blocks divides the stage count (qwen1.5-32b:
+64 blocks = 4/stage x 16). kimi's 61 (prime) blocks would need uneven
+stages — recorded in EXPERIMENTS.md. Embedding/LM-head are replicated;
+stage 0 injects embeddings, the last stage computes the chunked CE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.training import optimizer as opt_lib
+
+__all__ = ["build_pp_train_cell"]
+
+
+def _stage_params_reshape(params_shapes, n_stages):
+    """blocks leading dim nb -> [n_stages, nb/n_stages] (sharded on dim0)."""
+    def rs(x):
+        nb = x.shape[0]
+        return jax.ShapeDtypeStruct((n_stages, nb // n_stages) + x.shape[1:],
+                                    x.dtype)
+    return {**params_shapes,
+            "blocks": jax.tree.map(rs, params_shapes["blocks"])}
+
+
+def build_pp_train_cell(cfg: T.TransformerConfig, *, global_batch: int,
+                        seq: int, mesh: Mesh, n_micro: int = 16):
+    """Returns (train_step fn, arg ShapeDtypeStructs) for the PP mapping."""
+    n_stages = mesh.shape["model"]
+    n_data = mesh.shape.get("data", 1)
+    assert cfg.n_blocks % n_stages == 0, \
+        f"{cfg.n_blocks} blocks not divisible into {n_stages} stages"
+    bps = cfg.n_blocks // n_stages
+    assert global_batch % (n_data * n_micro) == 0
+    mb_local = global_batch // (n_data * n_micro)
+    d = cfg.d_model
+
+    params_shapes = _stage_params_reshape(
+        jax.eval_shape(functools.partial(T.init_params, cfg=cfg),
+                       jax.random.PRNGKey(0)), n_stages)
+    # shardings: blocks over stage dim; embed/head replicated; opt moments
+    # additionally over data (ZeRO-1)
+    def p_axes(path_is_block, x):
+        if path_is_block:
+            return ("model",) + (None,) * (len(x.shape) - 1)
+        return (None,) * len(x.shape)
+    params_axes = {
+        k: (jax.tree.map(functools.partial(p_axes, True), v)
+            if k == "blocks" else jax.tree.map(
+                functools.partial(p_axes, False), v))
+        for k, v in params_shapes.items()}
+
+    from repro.launch.steps import (_opt_state_axes, _tree_sds, _zero1_axes)
+    params_axes = {**params_axes,
+                   "embed": ("data", None) if params_shapes["embed"].shape[0]
+                   % n_data == 0 else (None, None)}
+    if "lm_head" in params_shapes:
+        params_axes["lm_head"] = (None, "data")
+    params = _tree_sds(params_shapes, params_axes, mesh)
+    opt = opt_lib.adamw(lr=3e-4, grad_clip=1.0)
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    opt_state = _tree_sds(opt_shapes,
+                          _opt_state_axes("adamw", params_axes,
+                                          params_shapes), mesh)
+    batch_specs = {
+        "tokens": jax.ShapeDtypeStruct(
+            (global_batch, seq), jnp.int32,
+            sharding=NamedSharding(mesh, P("data", None))),
+        "targets": jax.ShapeDtypeStruct(
+            (global_batch, seq), jnp.int32,
+            sharding=NamedSharding(mesh, P("data", None))),
+    }
+
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+    positions = None  # built inside
+
+    def _stage_apply(blocks_stage, x, pos):
+        """Apply this stage's bps blocks (each block = one lpb pattern)."""
+        def one(i, x):
+            blk = jax.tree.map(lambda a: a[i], blocks_stage)
+            return T._block(x, blk, cfg, pos)
+        body = jax.checkpoint(
+            lambda x, i: (one(i, x), None),
+            policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, jnp.arange(bps))
+        return x
+
+    def _ce(params, h, ts):
+        lc = min(cfg.loss_chunk, seq)
+
+        # checkpointed per chunk: without it the 31-tick scan stacks the
+        # [mb, lc, vocab] f32 logits for backward (382 GB measured)
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def chunk(hs, tt):
+            lg = T._logits(params, hs, cfg)
+            lse = jax.scipy.special.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, tt[..., None], axis=-1)[..., 0]
+            return jnp.sum(lse - gold)
+
+        total = jnp.float32(0.0)
+        for i in range(max(1, seq // lc)):
+            hs = jax.lax.dynamic_slice_in_dim(h, i * lc, lc, axis=1)
+            tt = jax.lax.dynamic_slice_in_dim(ts, i * lc, lc, axis=1)
+            total = total + chunk(hs, tt)
+        return total
+
+    def loss_fn(params, b):
+        def body(tokens, targets, embed, blocks, final_norm, *head):
+            head_p = {"lm_head": head[0]} if head else {}
+            j = jax.lax.axis_index("model")
+            # in_spec P('model') leaves a leading length-1 stage dim
+            blocks = jax.tree.map(lambda a: a[0], blocks)
+            # [n_micro, mb_local, S]
+            tk = tokens.reshape(n_micro, mb_local, seq)
+            tg = targets.reshape(n_micro, mb_local, seq)
+            pos = jnp.broadcast_to(jnp.arange(seq), (mb_local, seq))
+            n_ticks = n_micro + n_stages - 1
+            p_local = {"embed": embed, "final_norm": final_norm, **head_p}
+
+            def tick(carry, t):
+                x_recv, loss_acc = carry
+                mb_id = t - j                     # microbatch at this stage
+                valid = (mb_id >= 0) & (mb_id < n_micro)
+                safe = jnp.clip(mb_id, 0, n_micro - 1)
+                # stage 0 injects fresh embeddings
+                tok = jax.lax.dynamic_index_in_dim(tk, safe, 0, False)
+                emb = jnp.take(embed, tok, axis=0).astype(cfg.jdtype)
+                if cfg.embed_scale:
+                    emb = emb * np.sqrt(cfg.d_model)
+                x_in = jnp.where(j == 0, emb, x_recv)
+                x_out = _stage_apply(blocks, x_in, pos)
+                x_out = jnp.where(valid, x_out, x_recv)
+                # last stage: loss for its finished microbatch (cond so
+                # the vocab matmul runs only when taken)
+                tgt = jax.lax.dynamic_index_in_dim(tg, safe, 0, False)
+                take = valid & (j == n_stages - 1)
+                l = jax.lax.cond(
+                    take,
+                    lambda: _ce(p_local, T.rms_norm(x_out, final_norm), tgt),
+                    lambda: jnp.float32(0.0))
+                loss_acc = loss_acc + l
+                x_send = jax.lax.ppermute(x_out, "model", perm)
+                return (x_send, loss_acc), None
+
+            x0 = jnp.zeros((mb_local, seq, d), cfg.jdtype)
+            (_, loss_sum), _ = jax.lax.scan(
+                tick, (x0, jnp.float32(0.0)), jnp.arange(n_ticks))
+            # stage-15's sum -> everyone; mean over data shards & tokens
+            loss_sum = jax.lax.psum(loss_sum, "model")
+            loss_sum = jax.lax.pmean(loss_sum, "data")
+            return loss_sum / (n_micro * mb_local * seq)
+
+        # embed/lm_head are STORED data-sharded (ZeRO-style) but the
+        # lookup needs full tables per device -> replicated in_specs
+        # (XLA inserts the gather once per step)
+        in_specs = [P("data", None), P("data", None),
+                    P(None, None), P("model"), P()]
+        args = [b["tokens"], b["targets"], params["embed"],
+                params["blocks"], params["final_norm"]]
+        if "lm_head" in params:
+            in_specs.append(P(None, None))
+            args.append(params["lm_head"])
+        fn = jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                           out_specs=P(), check_vma=False)
+        return fn(*args)
+
+    def train_step(params, opt_state, b):
+        loss, grads = jax.value_and_grad(loss_fn)(params, b)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step, (params, opt_state, batch_specs)

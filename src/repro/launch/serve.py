@@ -1,0 +1,92 @@
+"""Serving launcher: batched scoring with compressed codebooks.
+
+Demonstrates the paper's inference story on CPU smoke scale:
+  * builds a BACO sketch over a synthetic graph,
+  * trains briefly, then serves batched top-k requests where every user/
+    item embedding is a codebook row (2-hot for users via SCU),
+  * reports p50/p99 latency over --n-requests batches.
+
+For the assigned archs, `--arch <id> --shape serve_p99|decode_32k` runs
+the smoke-scale serve/decode step (full configs are dry-run only).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paper_serving(args):
+    from repro.core import baco_build
+    from repro.data import paperlike_dataset
+    from repro.training import Trainer, TrainConfig
+    from repro.models import lightgcn as L
+
+    _, _, _, train, test = paperlike_dataset(args.dataset, seed=0)
+    sketch = baco_build(train, d=args.dim, ratio=0.25)
+    tr = Trainer(train, sketch, TrainConfig(dim=args.dim, steps=args.steps,
+                                            batch_size=2048, lr=5e-3))
+    tr.run(log_every=0)
+
+    @jax.jit
+    def serve(params, user_ids):
+        scores = L.score_all_items(params, tr.statics, tr.mcfg, user_ids)
+        return jax.lax.top_k(scores, args.k)
+
+    rng = np.random.default_rng(0)
+    lat = []
+    for _ in range(args.n_requests):
+        users = jnp.asarray(rng.integers(0, train.n_users, args.batch))
+        t0 = time.time()
+        vals, idx = serve(tr.params, users)
+        jax.block_until_ready(vals)
+        lat.append((time.time() - t0) * 1e3)
+    lat = np.sort(np.asarray(lat[1:]))          # drop compile
+    print(f"[serve] {args.n_requests} requests of batch {args.batch}: "
+          f"p50={lat[len(lat)//2]:.2f}ms "
+          f"p99={lat[int(len(lat)*0.99)]:.2f}ms "
+          f"(codebook {sketch.k_users}+{sketch.k_items} rows, "
+          f"{sketch.compression_ratio(args.dim)*100:.0f}% of full params)")
+    return 0
+
+
+def arch_serving(args):
+    from repro.launch.steps import build_cell
+    cell = build_cell(args.arch, args.shape, mesh=None, smoke=True)
+    fn = jax.jit(cell.fn)
+    out = fn(*cell.args)
+    jax.block_until_ready(out)
+    lat = []
+    for _ in range(args.n_requests):
+        t0 = time.time()
+        out = fn(*cell.args)
+        jax.block_until_ready(out)
+        lat.append((time.time() - t0) * 1e3)
+    lat = np.sort(np.asarray(lat))
+    print(f"[serve] {args.arch}:{args.shape} smoke "
+          f"p50={lat[len(lat)//2]:.2f}ms p99={lat[int(len(lat)*0.99)]:.2f}ms")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default="serve_p99")
+    ap.add_argument("--dataset", default="gowalla_s")
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--n-requests", type=int, default=50)
+    args = ap.parse_args(argv)
+    if args.arch:
+        return arch_serving(args)
+    return paper_serving(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,629 @@
+"""Step builders: (arch x shape) -> (step_fn, arg specs, shardings).
+
+This is the glue the dry-run, the launcher and the smoke tests share.
+Every builder returns a `Cell`:
+    fn:      the function to jit (train/prefill/decode/serve/retrieval)
+    args:    pytree of jax.ShapeDtypeStruct WITH NamedShardings attached
+             (dry-run) or concrete host arrays (smoke mode)
+    donate:  argnums to donate (params/opt-state/cache)
+Input specs follow the brief: ShapeDtypeStruct stand-ins, weak-type
+correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeSpec, get_arch
+from repro.distributed.sharding import logical_mapping, logical_to_spec
+from repro.models import lightgcn as LG
+from repro.models import recsys as R
+from repro.models import schnet as S
+from repro.models import transformer as T
+from repro.training import optimizer as opt_lib
+
+__all__ = ["Cell", "build_cell"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    donate: Tuple[int, ...] = ()
+    notes: str = ""
+
+
+# ---------------------------------------------------------------------------
+# spec helpers
+# ---------------------------------------------------------------------------
+def _sh(mesh: Optional[Mesh], *axes):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(mesh, axes))
+
+
+def _fit_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Downgrade any partition whose factor does not divide the dim:
+    ('data','model') -> 'model' -> 'data' -> replicated. Explicit input
+    shardings must divide evenly (GSPMD only pads intermediates)."""
+    out = []
+    used = set()
+    for i, part in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            out.append(None)
+            continue
+        cands = [part]
+        if isinstance(part, tuple):
+            cands += [p for p in part] + [None]
+        else:
+            cands += [None]
+        chosen = None
+        for c in cands:
+            axes = c if isinstance(c, tuple) else (c,) if c else ()
+            if any(a in used for a in axes):
+                continue            # a mesh axis may appear in ONE dim only
+            factor = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+            if shape[i] % factor == 0:
+                chosen = c
+                break
+        for a in (chosen if isinstance(chosen, tuple)
+                  else (chosen,) if chosen else ()):
+            used.add(a)
+        out.append(chosen)
+    return P(*out)
+
+
+def _sds(shape, dtype, mesh=None, axes=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if spec is None:
+        spec = logical_to_spec(mesh, axes or (None,) * len(shape))
+    sharding = NamedSharding(mesh, _fit_spec(mesh, spec, shape))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _tree_sds(shapes_tree, axes_tree, mesh):
+    """Zip a pytree of ShapeDtypeStructs with a tree of logical-axis tuples."""
+    flat_s, treedef = jax.tree.flatten(shapes_tree)
+    flat_a = treedef.flatten_up_to(axes_tree)
+    out = []
+    for s, a in zip(flat_s, flat_a):
+        out.append(_sds(s.shape, s.dtype, mesh, axes=a))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _replicated_axes_like(tree):
+    return jax.tree.map(lambda x: (None,) * len(x.shape), tree)
+
+
+def _zero1_axes(params_axes, params_shapes, data_size: int = 16,
+                tag: str = "data"):
+    """ZeRO-1: additionally shard optimizer moments over the data axis.
+
+    Adam moments are fp32 — for a 9B model that is 72 GB replicated per
+    data-parallel rank. Sharding each moment's largest still-replicated,
+    divisible dim over 'data' cuts it 16x; XLA turns the update into
+    reduce-scatter(grad) -> sharded update -> all-gather(param), the
+    standard ZeRO-1 schedule."""
+    flat_a, treedef = jax.tree.flatten(
+        params_axes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_s = treedef.flatten_up_to(params_shapes)
+    out = []
+    for ax, s in zip(flat_a, flat_s):
+        shape = s.shape
+        if any(a in ("data", "vocab")
+               or (isinstance(a, tuple) and "data" in a)
+               for a in ax):
+            out.append(ax)          # already data-sharded (e.g. FSDP)
+            continue
+        best, best_dim = None, 0
+        for i, a in enumerate(ax):
+            if a is None and shape[i] % data_size == 0 and \
+                    shape[i] > best_dim:
+                best, best_dim = i, shape[i]
+        if best is None:
+            out.append(ax)
+        else:
+            new = list(ax)
+            new[best] = tag
+            out.append(tuple(new))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _opt_state_axes(opt_name: str, params_axes, params_shapes=None,
+                    tag: str = "data"):
+    """Sharding axes for optimizer state, mirroring the param layout
+    (+ ZeRO-1 data-axis sharding of the moments when shapes provided)."""
+    if opt_name == "adamw":
+        m_axes = (_zero1_axes(params_axes, params_shapes, tag=tag)
+                  if params_shapes is not None else params_axes)
+        return {"step": (), "m": m_axes, "v": m_axes}
+    if opt_name == "adafactor":
+        flat_axes = jax.tree.leaves(
+            params_axes, is_leaf=lambda x: isinstance(x, tuple))
+        fac = []
+        for ax in flat_axes:
+            if len(ax) >= 2:
+                fac.append({"vr": tuple(ax[:-1]),
+                            "vc": tuple(ax[:-2]) + (ax[-1],)})
+            else:
+                fac.append({"v": tuple(ax)})
+        return {"step": (), "fac": fac}
+    raise ValueError(opt_name)
+
+
+def _materialize(args, seed=0):
+    """Turn ShapeDtypeStructs into concrete host arrays (smoke mode).
+    Leaves that are already concrete (pre-filled statics) pass through."""
+    rng = np.random.default_rng(seed)
+
+    def mk(x):
+        if not isinstance(x, jax.ShapeDtypeStruct):
+            return x
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, 2, x.shape), x.dtype)
+        return jnp.asarray(rng.standard_normal(x.shape), x.dtype)
+    return jax.tree.map(mk, args)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+def _lm_optimizer(cfg):
+    # 1T-param MoE: full Adam moments do not fit HBM -> Adafactor
+    if cfg.moe is not None and cfg.moe.n_experts >= 128:
+        return "adafactor", opt_lib.adafactor(lr=1e-2)
+    return "adamw", opt_lib.adamw(lr=3e-4, grad_clip=1.0)
+
+
+def _lm_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
+    cfg = spec.smoke_config() if smoke else spec.full_config()
+    dims = shape.dims
+    mapping = dims.get("mapping", "tp")
+    with logical_mapping(mapping):
+        return _lm_cell_inner(spec, shape, mesh, smoke, cfg, dims, mapping)
+
+
+def _wrap_mapping(fn, mapping):
+    if mapping == "tp":
+        return fn
+    import functools as _ft
+
+    @_ft.wraps(fn)
+    def inner(*a):
+        with logical_mapping(mapping):
+            return fn(*a)
+    return inner
+
+
+def _lm_cell_inner(spec, shape, mesh, smoke, cfg, dims, mapping) -> Cell:
+    if smoke:
+        seq = {"train": 16, "prefill": 16, "decode": 32}.get(shape.kind, 16)
+        batch = 4
+    else:
+        seq, batch = dims["seq_len"], dims["global_batch"]
+
+    params_shapes = jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    params_axes = T.param_logical_axes(cfg)
+    # FSDP decision: TP alone leaves params/16 per chip; above ~8 GB bf16
+    # (dbrx 16.5 GB, kimi 128 GB) the weights must also shard over 'data'
+    # (XLA all-gathers each scanned block's weights just-in-time).
+    model_shards = (mesh.shape.get("model", 1)
+                    if mesh is not None and mapping == "tp" else 1)
+    fsdp = (T.count_params(cfg) * 2 / max(model_shards, 1)) > 8e9
+    ztag = "data" if mapping == "tp" else "vocab"
+    if shape.kind != "train" or fsdp:
+        params_axes = _zero1_axes(params_axes, params_shapes, tag=ztag)
+    params = (T.init_params(jax.random.PRNGKey(0), cfg) if smoke
+              else _tree_sds(params_shapes, params_axes, mesh))
+
+    if shape.kind == "train":
+        opt_name, opt = _lm_optimizer(cfg)
+        if smoke:
+            opt_state = opt.init(params)
+        else:
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            opt_axes = _opt_state_axes(opt_name, params_axes, params_shapes,
+                                       tag=ztag)
+            opt_state = _tree_sds(opt_shapes, opt_axes, mesh)
+        batch_specs = {
+            "tokens": _sds((batch, seq), jnp.int32, mesh, ("batch", None)),
+            "targets": _sds((batch, seq), jnp.int32, mesh, ("batch", None)),
+        }
+        # gradient accumulation: per-chip activation peak scales with the
+        # microbatch, so 4 sequential microbatches keep 4k-seq training
+        # inside 16 GB HBM (grads accumulate in f32)
+        n_micro = micro if (micro := dims.get("microbatches")) else \
+            (8 if not smoke and shape.name == "train_4k" else 1)
+        # giant-MoE: the f32 accumulator alone would be 4 TB; accumulate
+        # in bf16 (stochastic error is dominated by bf16 grads anyway)
+        acc_dtype = jnp.bfloat16 if fsdp else jnp.float32
+
+        def train_step(params, opt_state, b):
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(T.train_loss)(params, b,
+                                                               cfg)
+            else:
+                def mb_body(acc, mb):
+                    g_acc, l_acc = acc
+                    l, g = jax.value_and_grad(T.train_loss)(params, mb, cfg)
+                    g_acc = jax.tree.map(
+                        lambda a, x: a + x.astype(acc_dtype), g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                        *x.shape[1:]), b)
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dtype), params)
+                (g_sum, l_sum), _ = jax.lax.scan(mb_body,
+                                                 (g0, jnp.float32(0.0)),
+                                                 mbs)
+                grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+                loss = l_sum / n_micro
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return Cell(spec.arch_id, shape.name, "train",
+                    _wrap_mapping(train_step, mapping),
+                    (params, opt_state, batch_specs), donate=(0, 1),
+                    notes=f"optimizer={opt_name},microbatches={n_micro},"
+                          f"mapping={mapping}")
+
+    if shape.kind == "prefill":
+        batch_specs = {
+            "tokens": _sds((batch, seq), jnp.int32, mesh, ("batch", None)),
+        }
+
+        def prefill_step(params, b):
+            return T.prefill(params, b, cfg, max_seq=seq)
+
+        return Cell(spec.arch_id, shape.name, "prefill",
+                    _wrap_mapping(prefill_step, mapping),
+                    (params, batch_specs))
+
+    # decode: KV cache as input, one new token
+    cache_shapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, seq))
+    if mesh is None:
+        cache = cache_shapes
+    else:
+        from repro.distributed.sharding import batch_axes
+        ba = batch_axes(mesh)           # ('pod','data') on the 512 mesh
+        cache = {}
+        for k, v in cache_shapes.items():
+            length = v.shape[3]
+            if batch == 1:
+                # long-context: shard seq over every available axis
+                # (_fit_spec downgrades if the length doesn't divide)
+                sp = P(None, None, None, ba + ("model",), None, None)
+            else:
+                sp = P(None, None, ba, "model", None, None)
+            cache[k] = _sds(v.shape, v.dtype, mesh, spec=sp)
+    batch_specs = {
+        "tokens": _sds((batch, 1), jnp.int32, mesh, ("batch", None)),
+        "pos": _sds((), jnp.int32, mesh, ()),
+    }
+
+    def decode(params, cache, b):
+        return T.decode_step(params, cache, b, cfg)
+
+    return Cell(spec.arch_id, shape.name, "decode",
+                _wrap_mapping(decode, mapping),
+                (params, cache, batch_specs), donate=(1,),
+                notes="KV cache seq-sharded (flash-decoding style)")
+
+
+# ---------------------------------------------------------------------------
+# GNN family (schnet)
+# ---------------------------------------------------------------------------
+def _gnn_param_axes(params):
+    return _replicated_axes_like(params)   # SchNet params are tiny
+
+
+def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
+    base = spec.smoke_config() if smoke else spec.full_config()
+    dims = dict(shape.dims)
+    if smoke:
+        scale = {"full_graph_sm": (64, 256), "minibatch_lg": (128, 512),
+                 "ogb_products": (128, 512), "molecule": (30, 64)}
+        dims["n_nodes"], dims["n_edges"] = scale[shape.name]
+        dims["batch"] = 4
+        if "d_feat" in dims:
+            dims["d_feat"] = 16
+
+    molecule = shape.name == "molecule"
+    d_feat = 0 if molecule else dims["d_feat"]
+    cfg = dataclasses.replace(base, d_feat=d_feat)
+    if molecule:
+        n_graphs = dims["batch"]
+        n = dims["n_nodes"] * n_graphs
+        e = dims["n_edges"] * n_graphs
+    else:
+        n, e = dims["n_nodes"], dims["n_edges"]
+    if not smoke:
+        # pad node/edge counts to the pod width so ('batch',) row sharding
+        # divides; pad edges carry dist > cutoff -> zero contribution
+        n = R.pad_rows(n)
+        e = R.pad_rows(e)
+
+    params_shapes = jax.eval_shape(
+        functools.partial(S.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    opt = opt_lib.adamw(lr=1e-3)
+    if smoke:
+        params = S.init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = opt.init(params)
+    else:
+        params = _tree_sds(params_shapes, _gnn_param_axes(params_shapes),
+                           mesh)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_state = _tree_sds(
+            opt_shapes,
+            _opt_state_axes("adamw", _gnn_param_axes(params_shapes)), mesh)
+    b = {
+        "edge_src": _sds((e,), jnp.int32, mesh, ("batch",)),
+        "edge_dst": _sds((e,), jnp.int32, mesh, ("batch",)),
+        "edge_dist": _sds((e,), jnp.float32, mesh, ("batch",)),
+    }
+    if molecule:
+        b["z"] = _sds((n,), jnp.int32, mesh, ("batch",))
+        b["graph_id"] = _sds((n,), jnp.int32, mesh, ("batch",))
+        b["targets"] = _sds((n_graphs,), jnp.float32, mesh, ("batch",))
+        loss_fn = S.train_loss
+    else:
+        b["feat"] = _sds((n, d_feat), jnp.float32, mesh, ("batch", None))
+        b["node_targets"] = _sds((n,), jnp.float32, mesh, ("batch",))
+        b["node_mask"] = _sds((n,), jnp.float32, mesh, ("batch",))
+        loss_fn = S.node_train_loss
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return Cell(spec.arch_id, shape.name, "train", train_step,
+                (params, opt_state, b), donate=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+def _recsys_param_axes(params):
+    def ax(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if str(name).startswith(("emb_", "wide_")) or name == "item_emb":
+            return ("vocab",) + (None,) * (len(x.shape) - 1)
+        return (None,) * len(x.shape)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree.unflatten(treedef, [ax(p, x) for p, x in flat])
+
+
+def _recsys_statics(cfg, mesh, smoke: bool):
+    """Sketch index specs for compressed fields (frozen BACO artifacts)."""
+    statics = {}
+    if isinstance(cfg, (R.DLRMConfig, R.WideDeepConfig)):
+        for f in cfg.compressed_fields():
+            shape = (R.pad_rows(cfg.vocabs[f]), 1)
+            statics[f"sketch_{f}"] = _sds(shape, jnp.int32, mesh,
+                                          ("vocab", None))
+    elif getattr(cfg, "etc_ratio", None) is not None:
+        statics["sketch_items"] = _sds((R.pad_rows(cfg.n_items), 1),
+                                       jnp.int32, mesh, ("vocab", None))
+    if smoke and statics:
+        # materialize valid indices (rng ints could exceed codebook range)
+        rng = np.random.default_rng(0)
+        out = {}
+        for k, v in statics.items():
+            if k == "sketch_items":
+                hi = cfg.table_rows
+            else:
+                hi = cfg.table_rows(int(k.split("_")[1]))
+            out[k] = jnp.asarray(rng.integers(0, hi, v.shape), jnp.int32)
+        return out
+    return statics
+
+
+def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
+    cfg = spec.smoke_config() if smoke else spec.full_config()
+    dims = dict(shape.dims)
+    if smoke:
+        dims["batch"] = 1 if shape.kind == "retrieval" else 8
+        dims["n_candidates"] = 64
+    batch = dims["batch"]
+    is_seq = isinstance(cfg, R.SASRecConfig)
+    is_bert = isinstance(cfg, R.BERT4RecConfig)
+    statics = _recsys_statics(cfg, mesh, smoke)
+
+    if is_seq:
+        init_fn = functools.partial(R.seqrec_init, cfg=cfg)
+    elif isinstance(cfg, R.DLRMConfig):
+        init_fn = functools.partial(R.dlrm_init, cfg=cfg)
+    else:
+        init_fn = functools.partial(R.widedeep_init, cfg=cfg)
+    params_shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    params_axes = _recsys_param_axes(params_shapes)
+    params = (init_fn(jax.random.PRNGKey(0)) if smoke
+              else _tree_sds(params_shapes, params_axes, mesh))
+
+    def mk_batch():
+        if is_bert:
+            if shape.kind == "train":
+                return {
+                    "seq": _sds((batch, cfg.seq_len), jnp.int32, mesh,
+                                ("batch", None)),
+                    "target_pos": _sds((batch, cfg.n_mask), jnp.int32, mesh,
+                                       ("batch", None)),
+                    "target_ids": _sds((batch, cfg.n_mask), jnp.int32, mesh,
+                                       ("batch", None)),
+                    "neg_ids": _sds((cfg.n_neg,), jnp.int32, mesh, (None,)),
+                }
+            nc = (dims.get("n_candidates", 100) if shape.kind == "retrieval"
+                  else 100)
+            return {
+                "seq": _sds((batch, cfg.seq_len), jnp.int32, mesh,
+                            ("batch", None)),
+                "target_pos": _sds((batch,), jnp.int32, mesh, ("batch",)),
+                "candidates": _sds((batch, nc), jnp.int32, mesh,
+                                   ("batch", None)),
+            }
+        if is_seq:
+            if shape.kind == "train":
+                return {
+                    "seq": _sds((batch, cfg.seq_len), jnp.int32, mesh,
+                                ("batch", None)),
+                    "neg": _sds((batch, cfg.seq_len - 1), jnp.int32, mesh,
+                                ("batch", None)),
+                }
+            nc = (dims.get("n_candidates", 100) if shape.kind == "retrieval"
+                  else 100)
+            return {
+                "seq": _sds((batch, cfg.seq_len), jnp.int32, mesh,
+                            ("batch", None)),
+                "candidates": _sds((batch, nc), jnp.int32, mesh,
+                                   ("batch", None)),
+            }
+        b = {}
+        if isinstance(cfg, R.DLRMConfig):
+            b["dense"] = _sds((batch, cfg.n_dense), jnp.float32, mesh,
+                              ("batch", None))
+        b["sparse"] = _sds((batch, cfg.n_sparse), jnp.int32, mesh,
+                           ("batch", None))
+        if shape.kind == "train":
+            b["label"] = _sds((batch,), jnp.float32, mesh, ("batch",))
+        if shape.kind == "retrieval":
+            b["candidates"] = _sds((dims["n_candidates"],), jnp.int32, mesh,
+                                   ("batch",))
+        return b
+
+    batch_specs = mk_batch()
+
+    if shape.kind == "train":
+        opt = opt_lib.adamw(lr=1e-3)
+        if smoke:
+            opt_state = opt.init(params)
+        else:
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            opt_state = _tree_sds(opt_shapes,
+                                  _opt_state_axes("adamw", params_axes),
+                                  mesh)
+        if is_bert:
+            loss_fn = functools.partial(R.bert4rec_train_loss, cfg=cfg)
+        elif is_seq:
+            loss_fn = functools.partial(R.sasrec_train_loss, cfg=cfg)
+        elif isinstance(cfg, R.DLRMConfig):
+            loss_fn = functools.partial(R.dlrm_train_loss, cfg=cfg)
+        else:
+            loss_fn = functools.partial(R.widedeep_train_loss, cfg=cfg)
+
+        def train_step(params, opt_state, statics, b):
+            loss, grads = jax.value_and_grad(loss_fn)(params, statics, b)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return Cell(spec.arch_id, shape.name, "train", train_step,
+                    (params, opt_state, statics, batch_specs), donate=(0, 1))
+
+    # serve / retrieval
+    if is_bert:
+        fwd = functools.partial(R.bert4rec_score_candidates, cfg=cfg)
+    elif is_seq:
+        fwd = functools.partial(R.sasrec_score_candidates, cfg=cfg)
+    elif isinstance(cfg, R.DLRMConfig):
+        fwd = (functools.partial(R.dlrm_retrieval, cfg=cfg)
+               if shape.kind == "retrieval"
+               else functools.partial(R.dlrm_forward, cfg=cfg))
+    else:
+        fwd = (functools.partial(R.widedeep_retrieval, cfg=cfg)
+               if shape.kind == "retrieval"
+               else functools.partial(R.widedeep_forward, cfg=cfg))
+
+    def serve_step(params, statics, b):
+        return fwd(params, statics, b)
+
+    return Cell(spec.arch_id, shape.name, shape.kind, serve_step,
+                (params, statics, batch_specs))
+
+
+# ---------------------------------------------------------------------------
+# CF family (the paper's LightGCN pipeline)
+# ---------------------------------------------------------------------------
+def _cf_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
+    cfg = spec.smoke_config() if smoke else spec.full_config()
+    batch = 8 if smoke else shape.dims["batch"]
+    nu, nv = cfg.n_users, cfg.n_items
+    e = max(4 * (nu + nv), 1024)
+    params_shapes = jax.eval_shape(
+        functools.partial(LG.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    axes = jax.tree.map(lambda x: ("vocab",) + (None,) * (len(x.shape) - 1),
+                        params_shapes)
+    params = (LG.init_params(jax.random.PRNGKey(0), cfg) if smoke
+              else _tree_sds(params_shapes, axes, mesh))
+    statics = {
+        "edge_u": _sds((e,), jnp.int32, mesh, ("batch",)),
+        "edge_v": _sds((e,), jnp.int32, mesh, ("batch",)),
+        "edge_norm": _sds((e,), jnp.float32, mesh, ("batch",)),
+    }
+    if cfg.k_users is not None:
+        statics["sketch_u"] = _sds((nu, cfg.n_hot_users), jnp.int32, mesh,
+                                   ("vocab", None))
+        statics["sketch_v"] = _sds((nv, 1), jnp.int32, mesh, ("vocab", None))
+    b = {"user": _sds((batch,), jnp.int32, mesh, ("batch",)),
+         "pos": _sds((batch,), jnp.int32, mesh, ("batch",)),
+         "neg": _sds((batch,), jnp.int32, mesh, ("batch",))}
+    opt = opt_lib.adamw(lr=1e-3)
+    if smoke:
+        opt_state = opt.init(params)
+    else:
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_state = _tree_sds(opt_shapes, _opt_state_axes("adamw", axes),
+                              mesh)
+    if smoke:
+        rng = np.random.default_rng(0)
+        statics = {k: (jnp.asarray(rng.integers(0, 2, v.shape), v.dtype)
+                       if jnp.issubdtype(v.dtype, jnp.integer)
+                       else jnp.asarray(rng.random(v.shape), v.dtype))
+                   for k, v in statics.items()}
+        if cfg.k_users is not None:
+            statics["sketch_u"] = jnp.asarray(
+                rng.integers(0, cfg.k_users, (nu, cfg.n_hot_users)),
+                jnp.int32)
+            statics["sketch_v"] = jnp.asarray(
+                rng.integers(0, cfg.k_items, (nv, 1)), jnp.int32)
+        statics["edge_u"] = jnp.asarray(rng.integers(0, nu, e), jnp.int32)
+        statics["edge_v"] = jnp.asarray(rng.integers(0, nv, e), jnp.int32)
+
+    def train_step(params, opt_state, statics, batch):
+        loss, grads = jax.value_and_grad(LG.bpr_loss_fn)(
+            params, statics, batch, cfg)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return Cell(spec.arch_id, shape.name, "train", train_step,
+                (params, opt_state, statics, b), donate=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+_FAMILY = {"lm": _lm_cell, "gnn": _gnn_cell, "recsys": _recsys_cell,
+           "cf": _cf_cell}
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Optional[Mesh] = None,
+               smoke: bool = False) -> Cell:
+    spec = get_arch(arch_id)
+    shape = spec.shape(shape_name)
+    cell = _FAMILY[spec.family](spec, shape, mesh, smoke)
+    if smoke:
+        cell = dataclasses.replace(cell, args=_materialize(cell.args))
+    return cell

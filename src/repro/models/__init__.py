@@ -1,0 +1,3 @@
+from . import lightgcn, transformer, schnet, recsys
+
+__all__ = ["lightgcn", "transformer", "schnet", "recsys"]

@@ -1,0 +1,119 @@
+"""LightGCN backbone (He et al. 2020) over full or compressed tables.
+
+The paper's evaluation protocol: LightGCN + BPR, where the embedding
+tables are either the full |U|x d / |V|x d matrices or codebooks indexed
+through a frozen sketch (U = Y_u Z_u, V = Y_v Z_v). Propagation runs over
+the *training* interaction graph with symmetric 1/sqrt(d_u d_v) weights;
+the final representation is the mean of the K+1 layer outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import BipartiteGraph
+from repro.core.sketch import Sketch
+from repro.embedding import init_codebook, codebook_lookup
+
+__all__ = ["LightGCNConfig", "make_statics", "init_params", "all_embeddings",
+           "bpr_loss_fn", "score_all_items"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LightGCNConfig:
+    n_users: int
+    n_items: int
+    dim: int = 64
+    n_layers: int = 3
+    l2: float = 1e-4
+    # compression: None -> full tables (identity sketch)
+    k_users: Optional[int] = None
+    k_items: Optional[int] = None
+    n_hot_users: int = 1
+
+
+def from_sketch(graph: BipartiteGraph, sketch: Optional[Sketch], dim=64,
+                n_layers=3, l2=1e-4) -> "LightGCNConfig":
+    if sketch is None:
+        return LightGCNConfig(graph.n_users, graph.n_items, dim, n_layers, l2)
+    return LightGCNConfig(graph.n_users, graph.n_items, dim, n_layers, l2,
+                          k_users=sketch.k_users, k_items=sketch.k_items,
+                          n_hot_users=sketch.user_idx.shape[1])
+
+
+def make_statics(graph: BipartiteGraph, sketch: Optional[Sketch] = None):
+    """Device-ready constants: normalized edges + sketch index arrays."""
+    du = np.maximum(graph.user_degrees(), 1).astype(np.float32)
+    dv = np.maximum(graph.item_degrees(), 1).astype(np.float32)
+    norm = 1.0 / np.sqrt(du[graph.edge_u] * dv[graph.edge_v])
+    statics = {
+        "edge_u": jnp.asarray(graph.edge_u),
+        "edge_v": jnp.asarray(graph.edge_v),
+        "edge_norm": jnp.asarray(norm),
+    }
+    if sketch is not None:
+        statics["sketch_u"] = jnp.asarray(sketch.user_idx)
+        statics["sketch_v"] = jnp.asarray(sketch.item_idx)
+    return statics
+
+
+def init_params(key, cfg: LightGCNConfig, scale: float = 0.1):
+    ku, kv = jax.random.split(key)
+    nu = cfg.k_users if cfg.k_users is not None else cfg.n_users
+    nv = cfg.k_items if cfg.k_items is not None else cfg.n_items
+    return {"user_table": init_codebook(ku, nu, cfg.dim, scale),
+            "item_table": init_codebook(kv, nv, cfg.dim, scale)}
+
+
+def _base_embeddings(params, statics, cfg: LightGCNConfig):
+    """Materialize E0 = [Y_u Z_u ; Y_v Z_v] (or the full tables)."""
+    if cfg.k_users is not None:
+        u = codebook_lookup(params["user_table"], statics["sketch_u"],
+                            jnp.arange(cfg.n_users))
+        v = codebook_lookup(params["item_table"], statics["sketch_v"],
+                            jnp.arange(cfg.n_items))
+        return u, v
+    return params["user_table"], params["item_table"]
+
+
+def all_embeddings(params, statics, cfg: LightGCNConfig):
+    """LightGCN propagation; returns (U [n_users,d], V [n_items,d])."""
+    u, v = _base_embeddings(params, statics, cfg)
+    eu, ev, w = statics["edge_u"], statics["edge_v"], statics["edge_norm"]
+    acc_u, acc_v = u, v
+    cu, cv = u, v
+    for _ in range(cfg.n_layers):
+        nu = jax.ops.segment_sum(cv[ev] * w[:, None], eu,
+                                 num_segments=cfg.n_users)
+        nv = jax.ops.segment_sum(cu[eu] * w[:, None], ev,
+                                 num_segments=cfg.n_items)
+        cu, cv = nu, nv
+        acc_u = acc_u + cu
+        acc_v = acc_v + cv
+    k = cfg.n_layers + 1
+    return acc_u / k, acc_v / k
+
+
+def bpr_loss_fn(params, statics, batch, cfg: LightGCNConfig):
+    """BPR over (user, pos, neg) with L2 on the *ego* embeddings."""
+    u_all, v_all = all_embeddings(params, statics, cfg)
+    uu = u_all[batch["user"]]
+    pi = v_all[batch["pos"]]
+    ni = v_all[batch["neg"]]
+    pos = jnp.sum(uu * pi, axis=-1)
+    neg = jnp.sum(uu * ni, axis=-1)
+    loss = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
+    u0, v0 = _base_embeddings(params, statics, cfg)
+    reg = (jnp.sum(u0[batch["user"]] ** 2) + jnp.sum(v0[batch["pos"]] ** 2)
+           + jnp.sum(v0[batch["neg"]] ** 2)) / batch["user"].shape[0]
+    return loss + cfg.l2 * reg
+
+
+def score_all_items(params, statics, cfg: LightGCNConfig, user_ids):
+    """[len(user_ids), n_items] scores (eval-time)."""
+    u_all, v_all = all_embeddings(params, statics, cfg)
+    return u_all[user_ids] @ v_all.T

@@ -1,0 +1,379 @@
+"""RecSys architectures: DLRM (MLPerf), Wide&Deep, SASRec, BERT4Rec.
+
+Common substrate: per-field embedding tables (optionally BACO-compressed
+through frozen sketch index arrays in `statics`), EmbeddingBag-style
+lookups, MLP towers. Tables are row-sharded over the whole pod
+("vocab" logical axis) — the industry-standard sharded-embedding layout
+whose lookup all-to-all volume is exactly what BACO's compression
+shrinks.
+
+Shapes (assigned):  train_batch B=65536 | serve_p99 B=512 |
+serve_bulk B=262144 | retrieval_cand B=1, C=1e6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.embedding import codebook_lookup
+
+__all__ = ["DLRMConfig", "WideDeepConfig", "SASRecConfig", "BERT4RecConfig",
+           "MLPERF_CRITEO_VOCABS"]
+
+# Criteo Terabyte cardinalities (MLPerf DLRM benchmark, day-based split).
+MLPERF_CRITEO_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36)
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def _init_lin(key, i, o):
+    return {"w": jax.random.normal(key, (i, o), jnp.float32) / np.sqrt(i),
+            "b": jnp.zeros((o,), jnp.float32)}
+
+
+def _lin(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _mlp(params: Sequence[dict], x, act=jax.nn.relu, last_act=False):
+    for i, p in enumerate(params):
+        x = _lin(p, x)
+        if last_act or i < len(params) - 1:
+            x = act(x)
+    return x
+
+
+def _init_mlp(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [_init_lin(k, i, o) for k, i, o in zip(ks, dims[:-1], dims[1:])]
+
+
+def pad_rows(n: int, mult: int = 256) -> int:
+    """Pad table rows to a multiple of the pod width so the 'vocab' row
+    sharding divides evenly (standard vocab-padding; pad rows are dead)."""
+    return ((n + mult - 1) // mult) * mult
+
+
+def _table_rows(vocab: int, etc_ratio: Optional[float],
+                compress_min: int) -> int:
+    if etc_ratio is not None and vocab >= compress_min:
+        return max(2, int(round(vocab * etc_ratio)))
+    return vocab
+
+
+def _field_lookup(table, ids, sketch=None):
+    """[..., d]; sketch int32[vocab, H] when the field is compressed."""
+    if sketch is not None:
+        return codebook_lookup(table, sketch, ids)
+    return jnp.take(table, ids, axis=0)
+
+
+def _bce(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocabs: Tuple[int, ...] = MLPERF_CRITEO_VOCABS
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    etc_ratio: Optional[float] = None       # BACO variant sets e.g. 0.25
+    compress_min: int = 100_000
+    dtype: str = "float32"
+
+    @property
+    def n_sparse(self):
+        return len(self.vocabs)
+
+    def table_rows(self, f: int) -> int:
+        return _table_rows(self.vocabs[f], self.etc_ratio, self.compress_min)
+
+    def compressed_fields(self):
+        return tuple(f for f in range(self.n_sparse)
+                     if self.table_rows(f) != self.vocabs[f])
+
+
+def dlrm_init(key, cfg: DLRMConfig):
+    ks = jax.random.split(key, cfg.n_sparse + 2)
+    params = {"bot": _init_mlp(ks[0], (cfg.n_dense,) + cfg.bot_mlp)}
+    n_int = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+    params["top"] = _init_mlp(ks[1], (cfg.bot_mlp[-1] + n_int,) + cfg.top_mlp)
+    for f in range(cfg.n_sparse):
+        rows = pad_rows(cfg.table_rows(f))
+        params[f"emb_{f}"] = (jax.random.normal(
+            ks[2 + f], (rows, cfg.embed_dim), jnp.float32)
+            / np.sqrt(cfg.embed_dim))
+    return params
+
+
+def _dlrm_features(params, statics, dense, sparse, cfg: DLRMConfig):
+    x = _mlp(params["bot"], dense, last_act=True)            # [B, d]
+    embs = [x]
+    for f in range(cfg.n_sparse):
+        sk = statics.get(f"sketch_{f}") if statics else None
+        t = shard(params[f"emb_{f}"], "vocab", None)
+        embs.append(_field_lookup(t, sparse[:, f], sk))
+    z = jnp.stack(embs, axis=1)                              # [B, F+1, d]
+    z = shard(z, "batch", None, None)
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)                 # dot interaction
+    fidx, gidx = np.tril_indices(cfg.n_sparse + 1, k=-1)
+    flat = inter[:, fidx, gidx]                              # [B, F(F+1)/2]
+    return jnp.concatenate([x, flat], axis=-1)
+
+
+def dlrm_forward(params, statics, batch, cfg: DLRMConfig):
+    feats = _dlrm_features(params, statics, batch["dense"], batch["sparse"],
+                           cfg)
+    return _mlp(params["top"], feats)[:, 0]
+
+
+def dlrm_train_loss(params, statics, batch, cfg: DLRMConfig):
+    return _bce(dlrm_forward(params, statics, batch, cfg), batch["label"])
+
+
+def dlrm_retrieval(params, statics, batch, cfg: DLRMConfig):
+    """Score C candidates of field 0 for ONE user context.
+
+    batch: dense [1, 13], sparse [1, F], candidates int32 [C].
+    The 25 fixed-field embeddings are computed once and broadcast.
+    """
+    cands = batch["candidates"]
+    c = cands.shape[0]
+    dense = jnp.broadcast_to(batch["dense"], (c, cfg.n_dense))
+    sparse = jnp.broadcast_to(batch["sparse"], (c, cfg.n_sparse))
+    sparse = sparse.at[:, 0].set(cands)
+    return dlrm_forward(params, statics,
+                        {"dense": dense, "sparse": sparse}, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep
+# ---------------------------------------------------------------------------
+def _widedeep_vocabs(n_fields: int = 40) -> Tuple[int, ...]:
+    # deterministic log-spaced cardinalities 1e3 .. 1e6
+    return tuple(int(round(10 ** (3 + 3 * i / (n_fields - 1))))
+                 for i in range(n_fields))
+
+
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    name: str = "wide-deep"
+    vocabs: Tuple[int, ...] = _widedeep_vocabs()
+    embed_dim: int = 32
+    mlp: Tuple[int, ...] = (1024, 512, 256)
+    etc_ratio: Optional[float] = None
+    compress_min: int = 100_000
+    dtype: str = "float32"
+
+    @property
+    def n_sparse(self):
+        return len(self.vocabs)
+
+    def table_rows(self, f):
+        return _table_rows(self.vocabs[f], self.etc_ratio, self.compress_min)
+
+    def compressed_fields(self):
+        return tuple(f for f in range(self.n_sparse)
+                     if self.table_rows(f) != self.vocabs[f])
+
+
+def widedeep_init(key, cfg: WideDeepConfig):
+    ks = jax.random.split(key, 2 * cfg.n_sparse + 2)
+    params = {"deep": _init_mlp(
+        ks[0], (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp + (1,)),
+        "bias": jnp.zeros((), jnp.float32)}
+    for f in range(cfg.n_sparse):
+        rows = pad_rows(cfg.table_rows(f))
+        params[f"emb_{f}"] = (jax.random.normal(
+            ks[1 + f], (rows, cfg.embed_dim), jnp.float32)
+            / np.sqrt(cfg.embed_dim))
+        params[f"wide_{f}"] = jnp.zeros((rows, 1), jnp.float32)
+    return params
+
+
+def widedeep_forward(params, statics, batch, cfg: WideDeepConfig):
+    sparse = batch["sparse"]
+    embs, wide = [], params["bias"]
+    for f in range(cfg.n_sparse):
+        sk = statics.get(f"sketch_{f}") if statics else None
+        t = shard(params[f"emb_{f}"], "vocab", None)
+        embs.append(_field_lookup(t, sparse[:, f], sk))
+        w = shard(params[f"wide_{f}"], "vocab", None)
+        wide = wide + _field_lookup(w, sparse[:, f], sk)[:, 0]
+    deep_in = shard(jnp.concatenate(embs, axis=-1), "batch", None)
+    deep = _mlp(params["deep"], deep_in)[:, 0]
+    return wide + deep
+
+
+def widedeep_train_loss(params, statics, batch, cfg):
+    return _bce(widedeep_forward(params, statics, batch, cfg), batch["label"])
+
+
+def widedeep_retrieval(params, statics, batch, cfg: WideDeepConfig):
+    cands = batch["candidates"]
+    c = cands.shape[0]
+    sparse = jnp.broadcast_to(batch["sparse"], (c, cfg.n_sparse))
+    sparse = sparse.at[:, 0].set(cands)
+    return widedeep_forward(params, statics, {"sparse": sparse}, cfg)
+
+
+# ---------------------------------------------------------------------------
+# sequential recommenders: SASRec (causal) and BERT4Rec (bidirectional)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    etc_ratio: Optional[float] = None
+    dtype: str = "float32"
+    causal: bool = True
+
+    @property
+    def table_rows(self):
+        if self.etc_ratio is None:
+            return self.n_items
+        return max(2, int(round(self.n_items * self.etc_ratio)))
+
+
+@dataclasses.dataclass(frozen=True)
+class BERT4RecConfig(SASRecConfig):
+    name: str = "bert4rec"
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    causal: bool = False
+    n_mask: int = 30             # masked positions per sequence
+    n_neg: int = 4096            # shared sampled-softmax negatives
+
+
+def seqrec_init(key, cfg: SASRecConfig):
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    params = {
+        "item_emb": jax.random.normal(ks[0], (pad_rows(cfg.table_rows), d),
+                                      jnp.float32) / np.sqrt(d),
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len, d),
+                                     jnp.float32) * 0.02,
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[2 + i], 4)
+        params["blocks"].append({
+            "wqkv": jax.random.normal(kk[0], (d, 3 * d), jnp.float32)
+                    / np.sqrt(d),
+            "wo": jax.random.normal(kk[1], (d, d), jnp.float32) / np.sqrt(d),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "ff1": _init_lin(kk[2], d, 4 * d),
+            "ff2": _init_lin(kk[3], 4 * d, d),
+        })
+    return params
+
+
+def _ln(x, scale, eps=1e-6):
+    m = x.mean(-1, keepdims=True)
+    v = ((x - m) ** 2).mean(-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps) * scale
+
+
+def _item_lookup(params, statics, ids, cfg):
+    table = shard(params["item_emb"], "vocab", None)
+    sk = statics.get("sketch_items") if statics else None
+    return _field_lookup(table, ids, sk)
+
+
+def seqrec_encode(params, statics, seq_ids, cfg: SASRecConfig):
+    """[B, L] item ids -> [B, L, d] contextual states."""
+    b, l = seq_ids.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    x = _item_lookup(params, statics, seq_ids, cfg) + params["pos_emb"][:l]
+    x = shard(x, "batch", None, None)
+    mask = None
+    if cfg.causal:
+        mask = jnp.tril(jnp.ones((l, l), bool))
+    for blk in params["blocks"]:
+        hx = _ln(x, blk["ln1"])
+        qkv = hx @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, l, h, d // h)
+        k = k.reshape(b, l, h, d // h)
+        v = v.reshape(b, l, h, d // h)
+        s = jnp.einsum("bqhe,bkhe->bhqk", q, k) / np.sqrt(d // h)
+        if mask is not None:
+            s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhe->bqhe", p, v).reshape(b, l, d)
+        x = x + o @ blk["wo"]
+        hx = _ln(x, blk["ln2"])
+        x = x + _lin(blk["ff2"], jax.nn.relu(_lin(blk["ff1"], hx)))
+        x = shard(x, "batch", None, None)
+    return x
+
+
+def sasrec_train_loss(params, statics, batch, cfg: SASRecConfig):
+    """Next-item BPR: input seq[:-1] predicts seq[1:], one neg/position."""
+    seq = batch["seq"]                       # [B, L]
+    neg = batch["neg"]                       # [B, L-1]
+    hs = seqrec_encode(params, statics, seq[:, :-1], cfg)  # [B, L-1, d]
+    pos_e = _item_lookup(params, statics, seq[:, 1:], cfg)
+    neg_e = _item_lookup(params, statics, neg, cfg)
+    ps = jnp.sum(hs * pos_e, -1)
+    ns = jnp.sum(hs * neg_e, -1)
+    valid = (seq[:, 1:] > 0).astype(jnp.float32)
+    loss = -jax.nn.log_sigmoid(ps - ns) * valid
+    return loss.sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def sasrec_score_candidates(params, statics, batch, cfg: SASRecConfig):
+    """serve: encode sequences, score given candidates [B, C] (or all)."""
+    hs = seqrec_encode(params, statics, batch["seq"], cfg)[:, -1]   # [B, d]
+    cand_e = _item_lookup(params, statics, batch["candidates"], cfg)
+    return jnp.einsum("bd,bcd->bc", hs, cand_e)
+
+
+def bert4rec_train_loss(params, statics, batch, cfg: BERT4RecConfig):
+    """Masked-item prediction with shared sampled-softmax negatives."""
+    hs = seqrec_encode(params, statics, batch["seq"], cfg)   # [B, L, d]
+    tgt_pos = batch["target_pos"]            # int32 [B, M]
+    tgt_ids = batch["target_ids"]            # int32 [B, M]
+    neg_ids = batch["neg_ids"]               # int32 [N]
+    hm = jnp.take_along_axis(hs, tgt_pos[..., None], axis=1)  # [B, M, d]
+    pos_e = _item_lookup(params, statics, tgt_ids, cfg)       # [B, M, d]
+    neg_e = _item_lookup(params, statics, neg_ids, cfg)       # [N, d]
+    pos_logit = jnp.sum(hm * pos_e, -1, keepdims=True)        # [B, M, 1]
+    neg_logit = jnp.einsum("bmd,nd->bmn", hm, neg_e)          # [B, M, N]
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=-1)
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    return jnp.mean(lse - pos_logit[..., 0])
+
+
+def bert4rec_score_candidates(params, statics, batch, cfg: BERT4RecConfig):
+    """serve: hidden state at the (single) masked slot vs candidates."""
+    hs = seqrec_encode(params, statics, batch["seq"], cfg)
+    hm = jnp.take_along_axis(
+        hs, batch["target_pos"][:, None, None].repeat(hs.shape[-1], -1),
+        axis=1)[:, 0]                                          # [B, d]
+    cand_e = _item_lookup(params, statics, batch["candidates"], cfg)
+    return jnp.einsum("bd,bcd->bc", hm, cand_e)

@@ -1,0 +1,706 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+One config drives gemma3-12b, gemma2-9b, qwen1.5-32b, kimi-k2, dbrx:
+  * GQA with any (n_heads, n_kv_heads); optional QKV bias (qwen)
+  * per-block layer patterns: e.g. gemma3 = 5 local + 1 global per block,
+    gemma2 = (local, global) alternating; full-attention models have a
+    1-layer block. Blocks are scanned (jax.lax.scan over stacked params)
+    so 64-layer models compile one block body.
+  * sliding-window local attention is BANDED, not masked-full: each query
+    chunk slices only the [qs-window, qs+qc) KV span, so local layers cost
+    O(S*(W+qc)) FLOPs — this is what makes long_500k sub-quadratic.
+  * optional attn/final logit softcap (gemma2), QK-norm (gemma3),
+    MoE FFN with sort-based capacity dispatch (kimi-k2, dbrx).
+  * cross-entropy is computed in seq chunks so the [B,S,vocab] logits
+    tensor never materializes.
+
+Sharding: activations (batch, -, -); attention heads / d_ff / experts /
+vocab rows over "model"; see distributed/sharding.py for logical axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+
+__all__ = ["TransformerConfig", "init_params", "param_logical_axes",
+           "train_loss", "prefill", "decode_step", "init_cache",
+           "count_params"]
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    block_pattern: Tuple[str, ...] = ("global",)   # per-layer attn kinds
+    window: int = 1024                      # local attention window
+    attn_softcap: Optional[float] = None    # gemma2: 50.0
+    final_softcap: Optional[float] = None   # gemma2: 30.0
+    qk_norm: bool = False                   # gemma3
+    qkv_bias: bool = False                  # qwen1.5
+    post_norm: bool = False                 # gemma2/3 sandwich norms
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10_000.0
+    embed_scale: bool = False               # gemma: x *= sqrt(d)
+    tie_embed: bool = True
+    dtype: str = "bfloat16"                 # params + activations
+    kv_cache_dtype: Optional[str] = None    # e.g. "float8_e4m3fn" (qwen
+                                            # decode_32k: 5.5 TB bf16 MHA
+                                            # cache does not fit 256 chips)
+    q_chunk: int = 512                      # attention query chunking
+    loss_chunk: int = 512                   # CE seq chunking
+    remat: bool = True
+    moe_impl: str = "local"                 # "local" shard_map dispatch or
+                                            # "gspmd" scatter (perf baseline)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def kv_jdtype(self):
+        return jnp.dtype(self.kv_cache_dtype or self.dtype)
+
+    @property
+    def layers_per_block(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_layers % self.layers_per_block == 0, \
+            f"{self.n_layers} layers not divisible by pattern {self.block_pattern}"
+        return self.n_layers // self.layers_per_block
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def _param_defs(cfg: TransformerConfig):
+    """path -> (shape, logical axes, fan_in). Blocks get leading stack dims."""
+    d, f, hq, hk, dh = (cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.hd)
+    nb, lpb = cfg.n_blocks, cfg.layers_per_block
+    defs = {
+        "embed": ((cfg.vocab_size, d), ("model", None), d),
+        "final_norm": ((d,), (None,), None),
+    }
+    if not cfg.tie_embed:
+        defs["lm_head"] = ((d, cfg.vocab_size), (None, "model"), d)
+    # QKV projections store heads MERGED ([d, H*Dh]) so the sharded dim is
+    # always divisible by the model axis (e.g. qwen's 40 heads x 128 =
+    # 5120 shards 16-way; the [.., H, Dh] view exists only on activations
+    # where GSPMD pads freely).
+    blk = {
+        "attn_norm": ((nb, lpb, d), (None, None, None), None),
+        "wq": ((nb, lpb, d, hq * dh), (None, None, None, "model"), d),
+        "wk": ((nb, lpb, d, hk * dh), (None, None, None, "model"), d),
+        "wv": ((nb, lpb, d, hk * dh), (None, None, None, "model"), d),
+        "wo": ((nb, lpb, hq * dh, d), (None, None, "model", None), hq * dh),
+        "mlp_norm": ((nb, lpb, d), (None, None, None), None),
+    }
+    if cfg.qkv_bias:
+        blk["bq"] = ((nb, lpb, hq * dh), (None, None, "model"), None)
+        blk["bk"] = ((nb, lpb, hk * dh), (None, None, "model"), None)
+        blk["bv"] = ((nb, lpb, hk * dh), (None, None, "model"), None)
+    if cfg.qk_norm:
+        blk["q_norm"] = ((nb, lpb, dh), (None, None, None), None)
+        blk["k_norm"] = ((nb, lpb, dh), (None, None, None), None)
+    if cfg.post_norm:
+        blk["attn_post_norm"] = ((nb, lpb, d), (None, None, None), None)
+        blk["mlp_post_norm"] = ((nb, lpb, d), (None, None, None), None)
+    if cfg.moe is None:
+        blk["w_gate"] = ((nb, lpb, d, f), (None, None, None, "model"), d)
+        blk["w_up"] = ((nb, lpb, d, f), (None, None, None, "model"), d)
+        blk["w_down"] = ((nb, lpb, f, d), (None, None, "model", None), f)
+    else:
+        e = cfg.moe.n_experts
+        blk["router"] = ((nb, lpb, d, e), (None, None, None, None), d)
+        blk["w_gate"] = ((nb, lpb, e, d, f), (None, None, "model", None, None), d)
+        blk["w_up"] = ((nb, lpb, e, d, f), (None, None, "model", None, None), d)
+        blk["w_down"] = ((nb, lpb, e, f, d), (None, None, "model", None, None), f)
+    defs["blocks"] = blk
+    return defs
+
+
+def _init_leaf(key, shape, fan_in, dtype):
+    if fan_in is None:                       # norm scales
+        return jnp.ones(shape, dtype=dtype)
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale
+            ).astype(dtype)
+
+
+def init_params(key, cfg: TransformerConfig):
+    defs = _param_defs(cfg)
+    flat = []
+
+    def walk(prefix, node, out):
+        for k, v in node.items():
+            if isinstance(v, dict):
+                walk(prefix + (k,), v, out)
+            else:
+                out.append((prefix + (k,), v))
+    walk((), defs, flat)
+    keys = jax.random.split(key, len(flat))
+    params = {}
+    for (path, (shape, _axes, fan)), kk in zip(flat, keys):
+        node = params
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = _init_leaf(kk, shape, fan, cfg.jdtype)
+    return params
+
+
+def param_logical_axes(cfg: TransformerConfig):
+    defs = _param_defs(cfg)
+
+    def walk(node):
+        return {k: (walk(v) if isinstance(v, dict) else v[1])
+                for k, v in node.items()}
+    return walk(defs)
+
+
+def count_params(cfg: TransformerConfig) -> int:
+    defs = _param_defs(cfg)
+    total = 0
+
+    def walk(node):
+        nonlocal total
+        for v in node.values():
+            if isinstance(v, dict):
+                walk(v)
+            else:
+                total += int(np.prod(v[0]))
+    walk(defs)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            ).astype(x.dtype) * scale
+
+
+def _rope(x, positions, theta):
+    """x [..., S, H, Dh]; positions [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [...,S,half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def expand_kv(k, n_heads: int):
+    """Replicate KV heads to the query-head count BEFORE attention.
+
+    Under 16-way tensor parallelism a [.., Hkv=8, ..] activation padded to
+    16 shards triggers GSPMD "involuntary full rematerialization" on the
+    grouped-einsum reshape; expanding to Hq keeps ONE head dim through
+    every attention op (the standard GQA-under-TP layout; the expand is a
+    cheap partial all-gather of the small KV projection)."""
+    b, s, hkv, dh = k.shape
+    g = n_heads // hkv
+    if g == 1:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, g, dh))
+    return k.reshape(b, s, hkv * g, dh)
+
+
+def _attend(q, k, v, kv_pos, q_pos, window, softcap, causal=True):
+    """q/k/v [B,S,H,Dh] with the SAME head count (kv pre-expanded)."""
+    b, sq, h, dh = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(dh)
+    scores = _softcap(scores, softcap)
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out
+
+
+def chunked_attention(q, k, v, *, window=None, softcap=None, causal=True,
+                      q_chunk=512, base_pos=0):
+    """Banded/causal attention, scanning query chunks.
+
+    For local layers (window set) each chunk slices only its KV band ->
+    O(S*(window+qc)) work. Global layers see full KV per chunk.
+    """
+    b, s, hq, dh = q.shape
+    skv = k.shape[1]
+    qc = min(q_chunk, s)
+    if s % qc != 0:           # fall back to single-shot for ragged sizes
+        qpos = base_pos + jnp.arange(s)
+        kpos = jnp.arange(skv)
+        return _attend(q, k, v, kpos, qpos, window, softcap, causal)
+    n_chunks = s // qc
+    span = skv if window is None else min(skv, window + qc)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, i):
+        qs = i * qc
+        qi = jax.lax.dynamic_slice_in_dim(q, qs, qc, axis=1)
+        q_pos = base_pos + qs + jnp.arange(qc)
+        if window is None:
+            ki, vi = k, v
+            kv_pos = jnp.arange(skv)
+        else:
+            start = jnp.clip(base_pos + qs + qc - span, 0, skv - span)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kv_pos = start + jnp.arange(span)
+        oi = _attend(qi, ki, vi, kv_pos, q_pos, window, softcap, causal)
+        return carry, oi
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # outs [n_chunks, B, qc, H, Dh] -> [B, S, H, Dh]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# layer / block bodies
+# ---------------------------------------------------------------------------
+def _proj_qkv(x, lp, li, cfg):
+    b, s, _ = x.shape
+    dh = cfg.hd
+
+    def p(w, bias, h):
+        y = jnp.einsum("bsd,df->bsf", x, w)
+        if bias is not None:
+            y = y + bias
+        return y.reshape(b, s, h, dh)
+    bq = lp["bq"][li] if cfg.qkv_bias else None
+    bk = lp["bk"][li] if cfg.qkv_bias else None
+    bv = lp["bv"][li] if cfg.qkv_bias else None
+    q = p(lp["wq"][li], bq, cfg.n_heads)
+    k = p(lp["wk"][li], bk, cfg.n_kv_heads)
+    v = p(lp["wv"][li], bv, cfg.n_kv_heads)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"][li])
+        k = rms_norm(k, lp["k_norm"][li])
+    return q, k, v
+
+
+def _mlp_dense(x, lp, li):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, lp["w_gate"][li]))
+    h = h * jnp.einsum("bsd,df->bsf", x, lp["w_up"][li])
+    h = shard(h, "batch", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, lp["w_down"][li])
+
+
+def _mlp_moe_local(x, lp, li, cfg):
+    """shard_map MoE: expert-shard-local dispatch (the EP hot fix).
+
+    Under plain GSPMD the scatter from batch-sharded tokens into the
+    (model,data)-sharded capacity buffer lowers to full-buffer
+    all-reduces — measured 164 TB/device/step on kimi-k2. Here every
+    (data i, model j) device selects FOR ITS OWN expert shard j the
+    tokens routed to its local E/16 experts (routing logits are computed
+    replicated — router is [d, E], negligible), runs the local grouped
+    GEMMs, and the ONLY cross-chip traffic is the [T_local, d] psum of
+    expert outputs over the model axis — the same volume as one dense
+    Megatron MLP all-reduce.
+    """
+    from repro.distributed.sharding import batch_axes, current_mesh
+    mesh = current_mesh()
+    if (cfg.moe_impl == "gspmd" or mesh is None
+            or "model" not in mesh.axis_names):
+        return _mlp_moe(x, lp, li, cfg)
+    moe = cfg.moe
+    e, k = moe.n_experts, moe.top_k
+    n_model = mesh.shape["model"]
+    if e % n_model != 0:
+        return _mlp_moe(x, lp, li, cfg)
+    e_loc = e // n_model
+    b, s, d = x.shape
+    ba = batch_axes(mesh)
+    bspec = jax.sharding.PartitionSpec(
+        ba if len(ba) > 1 else (ba[0] if ba else None), None, None)
+    wspec = jax.sharding.PartitionSpec("model", None, None)
+    rspec = jax.sharding.PartitionSpec(None, None)
+
+    router = lp["router"][li].astype(x.dtype)
+    wg, wu, wd = lp["w_gate"][li], lp["w_up"][li], lp["w_down"][li]
+
+    def body(xb, router, wg, wu, wd):
+        bl, sl, _ = xb.shape
+        t = bl * sl
+        xt = xb.reshape(t, d)
+        logits = jnp.einsum("td,de->te", xt, router)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate, idx = jax.lax.top_k(probs, k)
+        gate = (gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+                ).astype(xb.dtype)
+        j = jax.lax.axis_index("model")
+        lo = j * e_loc
+        flat_e = idx.reshape(-1).astype(jnp.int32)
+        flat_g = gate.reshape(-1)
+        tok = (jnp.arange(t * k, dtype=jnp.int32) // k)
+        local = (flat_e >= lo) & (flat_e < lo + e_loc)
+        le = jnp.where(local, flat_e - lo, e_loc)       # e_loc = drop bin
+        order = jnp.argsort(le, stable=True)
+        se = le[order]
+        toko = tok[order]
+        go = flat_g[order]
+        cap = max(8, min(int(np.ceil(t * k / e * moe.capacity_factor)), t))
+        starts = jnp.searchsorted(se, jnp.arange(e_loc + 1, dtype=se.dtype))
+        pos = jnp.arange(t * k, dtype=jnp.int32) - starts[
+            jnp.minimum(se, e_loc)].astype(jnp.int32)
+        keep = (se < e_loc) & (pos < cap)
+        oob_e = jnp.where(keep, se, e_loc)
+        oob_p = jnp.where(keep, pos, 0)
+        buf = jnp.zeros((e_loc + 1, cap, d), xb.dtype)
+        buf = buf.at[oob_e, oob_p].add(xt[toko])        # last row = trash
+        buf = buf[:e_loc]
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, wu)
+        out = jnp.einsum("ecf,efd->ecd", h, wd)         # [e_loc, cap, d]
+        rows = out[jnp.minimum(se, e_loc - 1),
+                   jnp.clip(pos, 0, cap - 1)]
+        rows = jnp.where(keep[:, None], rows, 0) * go[:, None]
+        y = jax.ops.segment_sum(rows, toko, num_segments=t)
+        y = jax.lax.psum(y, "model")                    # combine experts
+        return y.reshape(bl, sl, d).astype(xb.dtype)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(bspec, rspec, wspec, wspec, wspec),
+                       out_specs=bspec, check_vma=False)
+    return fn(x, router, wg, wu, wd)
+
+
+def _mlp_moe(x, lp, li, cfg):
+    """Sort-based capacity dispatch: no [T, E] one-hot materialization."""
+    b, s, d = x.shape
+    moe = cfg.moe
+    e, k = moe.n_experts, moe.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt, lp["router"][li].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                     # [T, k]
+    gate = (gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+    cap = int(np.ceil(t * k / e * moe.capacity_factor))
+    cap = max(8, min(cap, t))
+    flat_e = idx.reshape(-1).astype(jnp.int32)              # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    tok = (order // k).astype(jnp.int32)
+    starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    oob = jnp.where(pos < cap, pos, cap)                    # drop overflow
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[se, oob].set(xt[tok], mode="drop")
+    buf = shard(buf, "model", "data", None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, lp["w_gate"][li]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, lp["w_up"][li])
+    out = jnp.einsum("ecf,efd->ecd", h, lp["w_down"][li])
+    out = shard(out, "model", "data", None)
+    rows = out.at[se, jnp.minimum(pos, cap - 1)].get(mode="fill",
+                                                     fill_value=0)
+    rows = jnp.where((pos < cap)[:, None], rows, 0)
+    rows = rows * gate.reshape(-1)[order][:, None]
+    yt = jax.ops.segment_sum(rows, tok, num_segments=t)
+    return yt.reshape(b, s, d)
+
+
+def _layer(x, lp, li, kind, cfg, positions):
+    """One transformer layer (training/prefill path, no cache)."""
+    h = rms_norm(x, lp["attn_norm"][li])
+    q, k, v = _proj_qkv(h, lp, li, cfg)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    k = expand_kv(k, cfg.n_heads)
+    v = expand_kv(v, cfg.n_heads)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    win = cfg.window if kind == "local" else None
+    o = chunked_attention(q, k, v, window=win, softcap=cfg.attn_softcap,
+                          q_chunk=cfg.q_chunk)
+    o = jnp.einsum("bsf,fd->bsd", o.reshape(*o.shape[:2], -1),
+                   lp["wo"][li])
+    if cfg.post_norm:
+        o = rms_norm(o, lp["attn_post_norm"][li])
+    x = x + shard(o, "batch", None, None)
+    h = rms_norm(x, lp["mlp_norm"][li])
+    m = _mlp_moe_local(h, lp, li, cfg) if cfg.moe else _mlp_dense(h, lp, li)
+    if cfg.post_norm:
+        m = rms_norm(m, lp["mlp_post_norm"][li])
+    return x + shard(m, "batch", None, None)
+
+
+def _block(x, blk_params, cfg, positions):
+    for li, kind in enumerate(cfg.block_pattern):
+        x = _layer(x, blk_params, li, kind, cfg, positions)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+def _backbone(params, tokens, cfg, positions):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jdtype)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model)
+    x = shard(x, "batch", None, None)
+
+    body = functools.partial(_block, cfg=cfg, positions=positions)
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_fn(carry, blk):
+        return body(carry, blk), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["blocks"])
+    return rms_norm(x, params["final_norm"])
+
+
+def _logits(params, h, cfg):
+    table = params["embed"] if cfg.tie_embed else params["lm_head"]
+    if cfg.tie_embed:
+        out = jnp.einsum("bsd,vd->bsv", h, table)
+    else:
+        out = jnp.einsum("bsd,dv->bsv", h, table)
+    return _softcap(out.astype(jnp.float32), cfg.final_softcap)
+
+
+def train_loss(params, batch, cfg: TransformerConfig):
+    """Causal LM loss; CE computed per seq-chunk to bound logits memory."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = _backbone(params, tokens, cfg, positions)          # [B,S,D]
+    lc = min(cfg.loss_chunk, s)
+    n_chunks = max(1, s // lc)
+
+    # checkpointed: backward recomputes the [B,lc,V] logits per chunk
+    # instead of stacking them across the scan (saves ~4 GB/chunk f32)
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(acc, i):
+        hs = jax.lax.dynamic_slice_in_dim(h, i * lc, lc, axis=1)
+        ts = jax.lax.dynamic_slice_in_dim(targets, i * lc, lc, axis=1)
+        lg = _logits(params, hs, cfg)                      # [B,lc,V] f32
+        lg = shard(lg, "batch", None, "model")
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, ts[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(n_chunks))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def _cache_kinds(cfg):
+    kinds = {}
+    for kind in cfg.block_pattern:
+        kinds[kind] = kinds.get(kind, 0) + 1
+    return kinds
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int):
+    """Layer-stacked KV caches; local layers get ring buffers of size W."""
+    kinds = _cache_kinds(cfg)
+    cache = {}
+    for kind, n_per_block in kinds.items():
+        length = max_seq if kind == "global" else min(cfg.window, max_seq)
+        shp = (cfg.n_blocks, n_per_block, batch, length, cfg.n_kv_heads,
+               cfg.hd)
+        cache[f"k_{kind}"] = jnp.zeros(shp, cfg.kv_jdtype)
+        cache[f"v_{kind}"] = jnp.zeros(shp, cfg.kv_jdtype)
+    return cache
+
+
+def cache_logical_axes(cfg: TransformerConfig, seq_shard: bool):
+    """Sharding for caches: batch over data; seq over model when decode-
+    bound (sequence-parallel flash-decoding), else heads over model."""
+    axes = {}
+    for kind in _cache_kinds(cfg):
+        if seq_shard:
+            spec = (None, None, "data", "model", None, None)
+        else:
+            spec = (None, None, "batch", None, "model", None)
+        axes[f"k_{kind}"] = spec
+        axes[f"v_{kind}"] = spec
+    return axes
+
+
+def decode_step(params, cache, batch, cfg: TransformerConfig):
+    """One token for every sequence. batch = {tokens [B,1], pos int32 []}.
+
+    Returns (logits [B, vocab], new cache).
+    """
+    tokens, pos = batch["tokens"], batch["pos"]
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jdtype)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model)
+
+    kinds = list(_cache_kinds(cfg).keys())
+
+    def block_body(x, blk):
+        blk_params, blk_cache = blk
+        counters = {k: 0 for k in kinds}
+        new_cache = {k: v for k, v in blk_cache.items()}
+        for li, kind in enumerate(cfg.block_pattern):
+            ci = counters[kind]
+            counters[kind] += 1
+            h = rms_norm(x, blk_params["attn_norm"][li])
+            q, k, v = _proj_qkv(h, blk_params, li, cfg)
+            q = _rope(q, positions, cfg.rope_theta)
+            k = _rope(k, positions, cfg.rope_theta)
+            kc, vc = new_cache[f"k_{kind}"][ci], new_cache[f"v_{kind}"][ci]
+            length = kc.shape[-3]
+            slot = pos % length if kind == "local" else pos
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(cfg.kv_jdtype), slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(cfg.kv_jdtype), slot, axis=1)
+            new_cache[f"k_{kind}"] = new_cache[f"k_{kind}"].at[ci].set(kc)
+            new_cache[f"v_{kind}"] = new_cache[f"v_{kind}"].at[ci].set(vc)
+            n_valid = jnp.minimum(pos + 1, length)
+            kv_pos = jnp.arange(length)
+            mask = kv_pos < n_valid
+            dh = cfg.hd
+            hkv = cfg.n_kv_heads
+            grp = cfg.n_heads // hkv
+            # decode keeps GQA grouped (cache is (batch, seq)-sharded,
+            # not head-sharded, so the train-path GSPMD remat trap does
+            # not apply) — avoids materializing the x`grp` expanded KV
+            ke = kc.astype(cfg.jdtype)
+            ve = vc.astype(cfg.jdtype)
+            qh = q.reshape(b, 1, hkv, grp, dh)
+            scores = jnp.einsum("bqhgd,bkhd->bhgqk", qh, ke,
+                                preferred_element_type=jnp.float32)
+            scores = _softcap(scores / np.sqrt(dh), cfg.attn_softcap)
+            scores = jnp.where(mask[None, None, None, None, :], scores,
+                               -1e30)
+            p = jax.nn.softmax(scores, axis=-1).astype(cfg.jdtype)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p, ve)
+            o = o.reshape(b, 1, cfg.n_heads, dh)
+            o = jnp.einsum("bsf,fd->bsd", o.reshape(*o.shape[:2], -1),
+                           blk_params["wo"][li])
+            if cfg.post_norm:
+                o = rms_norm(o, blk_params["attn_post_norm"][li])
+            x = x + o
+            h = rms_norm(x, blk_params["mlp_norm"][li])
+            m = (_mlp_moe_local(h, blk_params, li, cfg) if cfg.moe
+                 else _mlp_dense(h, blk_params, li))
+            if cfg.post_norm:
+                m = rms_norm(m, blk_params["mlp_post_norm"][li])
+            x = x + m
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(block_body, x, (params["blocks"], cache))
+    h = rms_norm(x, params["final_norm"])
+    logits = _logits(params, h, cfg)[:, 0]
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: TransformerConfig, max_seq: int):
+    """Process a full prompt; returns (last-position logits, filled cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jdtype)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model)
+    x = shard(x, "batch", None, None)
+    kinds = _cache_kinds(cfg)
+
+    def block_body(x, blk_params):
+        new_kv = {}
+        counters = {k: 0 for k in kinds}
+        for li, kind in enumerate(cfg.block_pattern):
+            ci = counters[kind]
+            counters[kind] += 1
+            h = rms_norm(x, blk_params["attn_norm"][li])
+            q, k, v = _proj_qkv(h, blk_params, li, cfg)
+            q = _rope(q, positions, cfg.rope_theta)
+            k = _rope(k, positions, cfg.rope_theta)
+            ke = expand_kv(k, cfg.n_heads)
+            ve = expand_kv(v, cfg.n_heads)
+            win = cfg.window if kind == "local" else None
+            o = chunked_attention(q, ke, ve, window=win,
+                                  softcap=cfg.attn_softcap,
+                                  q_chunk=cfg.q_chunk)
+            o = jnp.einsum("bsf,fd->bsd", o.reshape(*o.shape[:2], -1),
+                           blk_params["wo"][li])
+            if cfg.post_norm:
+                o = rms_norm(o, blk_params["attn_post_norm"][li])
+            x = x + shard(o, "batch", None, None)
+            h = rms_norm(x, blk_params["mlp_norm"][li])
+            m = (_mlp_moe_local(h, blk_params, li, cfg) if cfg.moe
+                 else _mlp_dense(h, blk_params, li))
+            if cfg.post_norm:
+                m = rms_norm(m, blk_params["mlp_post_norm"][li])
+            x = x + shard(m, "batch", None, None)
+            # cache: local layers keep the last `window` positions
+            length = max_seq if kind == "global" else min(cfg.window, max_seq)
+            kpad = jnp.zeros((b, length, cfg.n_kv_heads, cfg.hd),
+                             cfg.kv_jdtype)
+            vpad = jnp.zeros_like(kpad)
+            take = min(length, s)
+            # ring layout: position p lives at slot p % length so the
+            # decode step's `pos % length` writes continue seamlessly
+            slots = np.arange(s - take, s) % length
+            kpad = kpad.at[:, slots].set(
+                k[:, s - take:].astype(cfg.kv_jdtype))
+            vpad = vpad.at[:, slots].set(
+                v[:, s - take:].astype(cfg.kv_jdtype))
+            new_kv.setdefault(f"k_{kind}", []).append(kpad)
+            new_kv.setdefault(f"v_{kind}", []).append(vpad)
+        stacked = {k: jnp.stack(vs) for k, vs in new_kv.items()}
+        return x, stacked
+
+    x, cache = jax.lax.scan(block_body, x, params["blocks"])
+    h = rms_norm(x[:, -1:], params["final_norm"])
+    logits = _logits(params, h, cfg)[:, 0]
+    return logits, cache

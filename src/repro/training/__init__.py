@@ -1,0 +1,5 @@
+from . import optimizer, checkpoint, compress, eval as eval_metrics
+from .train_loop import Trainer, TrainConfig
+
+__all__ = ["optimizer", "checkpoint", "compress", "eval_metrics",
+           "Trainer", "TrainConfig"]

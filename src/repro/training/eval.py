@@ -1,0 +1,47 @@
+"""Ranking metrics: Recall@K and NDCG@K (paper's evaluation protocol)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+__all__ = ["recall_ndcg_at_k", "topk_from_scores"]
+
+
+def topk_from_scores(scores: np.ndarray, k: int,
+                     exclude: Tuple[np.ndarray, np.ndarray] | None = None,
+                     ) -> np.ndarray:
+    """Row-wise top-k item ids, masking out training interactions."""
+    s = np.array(scores, dtype=np.float32, copy=True)
+    if exclude is not None:
+        s[exclude[0], exclude[1]] = -np.inf
+    idx = np.argpartition(-s, kth=min(k, s.shape[1] - 1), axis=1)[:, :k]
+    part = np.take_along_axis(s, idx, axis=1)
+    order = np.argsort(-part, axis=1)
+    return np.take_along_axis(idx, order, axis=1)
+
+
+def recall_ndcg_at_k(topk: np.ndarray, test_user: np.ndarray,
+                     test_item: np.ndarray, user_ids: np.ndarray,
+                     k: int = 20) -> Dict[str, float]:
+    """topk [n_eval_users, k] from topk_from_scores; metrics averaged over
+    users that have at least one test interaction (paper protocol)."""
+    from collections import defaultdict
+    truth = defaultdict(set)
+    for u, i in zip(test_user, test_item):
+        truth[int(u)].add(int(i))
+    recalls, ndcgs = [], []
+    inv_log = 1.0 / np.log2(np.arange(2, k + 2))
+    for row, u in zip(topk, user_ids):
+        t = truth.get(int(u))
+        if not t:
+            continue
+        hits = np.asarray([int(i) in t for i in row[:k]], dtype=np.float32)
+        recalls.append(hits.sum() / min(len(t), k))
+        dcg = float((hits * inv_log).sum())
+        idcg = float(inv_log[:min(len(t), k)].sum())
+        ndcgs.append(dcg / idcg if idcg > 0 else 0.0)
+    if not recalls:
+        return {"recall": 0.0, "ndcg": 0.0, "n_users": 0}
+    return {"recall": float(np.mean(recalls)),
+            "ndcg": float(np.mean(ndcgs)), "n_users": len(recalls)}

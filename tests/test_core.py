@@ -1,0 +1,234 @@
+"""Core BACO tests: solver equivalences, objective behaviour, SCU, sketch."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BipartiteGraph, Sketch, baco_build, build_sketch,
+                        compact_labels, fit_gamma, make_weights,
+                        secondary_user_labels, solver_jax, solver_numpy)
+from repro.core import metrics
+from repro.data import planted_coclusters
+
+
+def small_graph(seed=0, nu=300, nv=240, k=12):
+    g, uc, ic = planted_coclusters(nu, nv, k_true=k, avg_deg=10, seed=seed)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# graph structure
+# ---------------------------------------------------------------------------
+def test_graph_dedup_and_csr():
+    g = BipartiteGraph.from_edges(3, 4, [0, 0, 1, 2, 0], [1, 1, 2, 3, 0])
+    assert g.n_edges == 4                     # (0,1) deduped
+    assert g.user_degrees().tolist() == [2, 1, 1]
+    assert g.item_degrees().tolist() == [1, 1, 1, 1]
+    indptr, nbrs = g.user_csr()
+    assert nbrs[indptr[0]:indptr[1]].tolist() == [0, 1]
+
+
+def test_graph_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        BipartiteGraph.from_edges(2, 2, [0, 5], [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# weights (Table 2)
+# ---------------------------------------------------------------------------
+def test_hws_weights():
+    g = small_graph()
+    wu, wv = make_weights(g, "hws")
+    e = g.n_edges
+    np.testing.assert_allclose(wu, g.user_degrees() / np.sqrt(e))
+    np.testing.assert_allclose(wv, 1.0 / np.sqrt(g.n_items))
+
+
+def test_modularity_weights_symmetric():
+    g = small_graph()
+    wu, wv = make_weights(g, "modularity")
+    np.testing.assert_allclose(wv, g.item_degrees() / np.sqrt(g.n_edges))
+    np.testing.assert_allclose(wu, g.user_degrees() / np.sqrt(g.n_edges))
+
+
+# ---------------------------------------------------------------------------
+# solvers
+# ---------------------------------------------------------------------------
+def test_solvers_raise_objective_vs_singletons():
+    g = small_graph()
+    wu, wv = make_weights(g, "hws")
+    gamma = 2.0
+    singleton = np.arange(g.n_nodes, dtype=np.int32)
+    base = metrics.objective(g, singleton, wu, wv, gamma)
+    for labels, _ in [solver_jax.lp_solve(g, wu, wv, gamma, max_iters=8),
+                      solver_numpy.lp_solve_sequential(g, wu, wv, gamma,
+                                                       max_iters=8)]:
+        assert metrics.objective(g, labels, wu, wv, gamma) > base
+
+
+def test_jax_solver_matches_numpy_objective_quality():
+    """TPU-native side-sync solver reaches the sequential solver's
+    objective within 5% (greedy order differs — labels need not match)."""
+    g = small_graph(seed=3)
+    wu, wv = make_weights(g, "hws")
+    gamma = 2.0
+    lj, _ = solver_jax.lp_solve(g, wu, wv, gamma, max_iters=8)
+    ln, _ = solver_numpy.lp_solve_sequential(g, wu, wv, gamma, max_iters=8)
+    oj = metrics.objective(g, lj, wu, wv, gamma)
+    on = metrics.objective(g, ln, wu, wv, gamma)
+    assert oj >= 0.95 * on
+
+
+def test_gamma_zero_is_plain_lp_merges_everything_connected():
+    g = small_graph()
+    wu, wv = make_weights(g, "cpm")
+    labels, _ = solver_jax.lp_solve(g, wu, wv, 0.0, max_iters=8)
+    k = np.unique(labels).size
+    assert k < g.n_nodes * 0.5     # massive merging without balance term
+
+
+def test_higher_gamma_more_clusters():
+    g = small_graph()
+    wu, wv = make_weights(g, "hws")
+    ks = []
+    for gamma in [0.5, 4.0, 32.0]:
+        labels, _ = solver_jax.lp_solve(g, wu, wv, gamma, max_iters=8)
+        ks.append(np.unique(labels).size)
+    assert ks[0] <= ks[1] <= ks[2]
+    assert ks[0] < ks[2]
+
+
+def test_fit_gamma_meets_budget():
+    g = small_graph()
+    wu, wv = make_weights(g, "hws")
+    budget = 140
+    gamma, labels, _ = fit_gamma(g, wu, wv, budget)
+    ku = np.unique(labels[:g.n_users]).size
+    kv = np.unique(labels[g.n_users:]).size
+    assert ku + kv <= budget
+    assert ku + kv >= budget * 0.4     # not degenerate
+
+
+def test_recovers_planted_coclusters():
+    """With clean planted structure the solver should align clusters with
+    ground truth far better than chance (measured by pairwise F1 proxy)."""
+    g, uc, ic = planted_coclusters(400, 300, k_true=8, avg_deg=20,
+                                   noise=0.05, seed=1)
+    wu, wv = make_weights(g, "hws")
+    gamma, labels, _ = fit_gamma(g, wu, wv, budget=30)
+    lu = labels[:g.n_users]
+    # purity of user clusters w.r.t. planted clusters
+    purity = 0
+    for c in np.unique(lu):
+        members = uc[lu == c]
+        purity += np.bincount(members).max()
+    purity /= g.n_users
+    assert purity > 0.6
+
+
+# ---------------------------------------------------------------------------
+# SCU + sketch
+# ---------------------------------------------------------------------------
+def test_scu_shapes_and_budget():
+    g = small_graph()
+    sk = baco_build(g, d=64, ratio=0.3, scu=True)
+    assert sk.user_idx.shape == (g.n_users, 2)
+    assert sk.item_idx.shape == (g.n_items, 1)
+    # B' accounting: (B*d - |U|)/d rows at most from the primary run
+    assert sk.meta["eff_budget"] <= sk.meta["budget"]
+
+
+def test_scu_differs_from_primary_for_some_users():
+    g = small_graph(seed=5)
+    sk = baco_build(g, d=64, ratio=0.3, scu=True)
+    frac_diff = np.mean(sk.user_idx[:, 0] != sk.user_idx[:, 1])
+    assert frac_diff > 0.01
+
+
+def test_compact_labels_joint():
+    k, a, b = compact_labels(np.array([5, 9, 5]), np.array([9, 77, 5]))
+    assert k == 3
+    assert a.tolist() == [0, 1, 0]
+    assert b.tolist() == [1, 2, 0]
+
+
+def test_sketch_param_accounting():
+    sk = Sketch(np.zeros((10, 2), np.int32), np.zeros((20, 1), np.int32),
+                4, 6)
+    assert sk.n_params(64) == 10 * 64
+    assert sk.compression_ratio(64) == 10 / 30
+    assert sk.dense_Y_user().shape == (10, 4)
+
+
+# ---------------------------------------------------------------------------
+# baselines + metrics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["random", "frequency", "double", "hybrid",
+                                  "lsh", "lp", "lpab", "louvain_modularity",
+                                  "louvain_cpm", "double_graphhash", "leiden",
+                                  "scc", "sbc", "itcc", "baco",
+                                  "baco_no_scu"])
+def test_all_baselines_produce_valid_sketches(name):
+    g = small_graph(seed=7, nu=200, nv=150, k=8)
+    sk = build_sketch(name, g, budget=100)
+    assert sk.n_users == g.n_users and sk.n_items == g.n_items
+    assert 0 < sk.k_users <= g.n_users
+    assert 0 < sk.k_items <= g.n_items
+
+
+def test_gini_extremes():
+    assert metrics.gini(np.array([5, 5, 5, 5])) == pytest.approx(0, abs=1e-9)
+    skew = metrics.gini(np.array([1, 1, 1, 97]))
+    assert skew > 0.5
+
+
+def test_intra_edges_bounds():
+    g = small_graph()
+    one_cluster = np.zeros(g.n_nodes, dtype=np.int32)
+    assert metrics.intra_edges(g, one_cluster) == g.n_edges
+    singletons = np.arange(g.n_nodes, dtype=np.int32)
+    assert metrics.intra_edges(g, singletons) == 0
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(10, 60), st.integers(10, 60), st.integers(1, 6),
+       st.integers(0, 1000))
+def test_property_solver_invariants(nu, nv, avg_deg, seed):
+    rng = np.random.default_rng(seed)
+    e = max(1, nu * avg_deg)
+    g = BipartiteGraph.from_edges(nu, nv, rng.integers(0, nu, e),
+                                  rng.integers(0, nv, e))
+    wu, wv = make_weights(g, "hws")
+    labels, _ = solver_jax.lp_solve(g, wu, wv, 1.0, max_iters=4)
+    # labels stay in the shared id space
+    assert labels.min() >= 0 and labels.max() < g.n_nodes
+    # objective never below singleton baseline
+    singleton = np.arange(g.n_nodes, dtype=np.int32)
+    assert (metrics.objective(g, labels, wu, wv, 1.0)
+            >= metrics.objective(g, singleton, wu, wv, 1.0) - 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 50), st.integers(0, 99))
+def test_property_gini_range(k, seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 100, k)
+    gg = metrics.gini(sizes)
+    assert -1e-9 <= gg < 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 500))
+def test_property_sketch_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    ul = rng.integers(0, 7, 40)
+    il = rng.integers(0, 9, 30)
+    sk = Sketch.one_hot(ul, il)
+    yu = sk.dense_Y_user()
+    # exactly one-hot, and equal labels share columns
+    assert (yu.sum(1) == 1).all()
+    same = ul[:, None] == ul[None, :]
+    cols = sk.user_idx[:, 0]
+    assert ((cols[:, None] == cols[None, :]) == same).all()

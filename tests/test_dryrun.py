@@ -1,0 +1,64 @@
+"""Dry-run integration: lower+compile one real cell per family on the
+production mesh inside a subprocess (XLA device count is process-global,
+so the 512-device flag must not leak into this test process)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_cell
+recs = [run_cell("schnet", "molecule", verbose=False),
+        run_cell("sasrec", "serve_p99", verbose=False),
+        run_cell("sasrec", "serve_p99", multi_pod=True, verbose=False)]
+print("RESULT:" + json.dumps([
+    {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+     "ok": r["ok"] is True,
+     "has_metrics": bool(r.get("hlo_metrics", {}).get("hbm_bytes"))}
+    for r in recs]))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cells_compile_on_production_meshes():
+    out = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT:")][-1]
+    recs = json.loads(line[len("RESULT:"):])
+    assert len(recs) == 3
+    for r in recs:
+        assert r["ok"], r
+        assert r["has_metrics"], r
+    assert recs[2]["mesh"] == "2x16x16"
+
+
+PP_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, jax
+from repro.launch.mesh import make_production_mesh
+from repro.launch.pipeline import build_pp_train_cell
+from repro.configs import get_arch
+cfg = dataclasses.replace(get_arch("qwen1.5-32b").smoke_config(),
+                          n_layers=16)
+mesh = make_production_mesh()
+with mesh:
+    step, args = build_pp_train_cell(cfg, global_batch=256, seq=16,
+                                     mesh=mesh, n_micro=16)
+    compiled = jax.jit(step, donate_argnums=(0, 1)).lower(*args).compile()
+print("PP_OK", compiled.memory_analysis().temp_size_in_bytes)
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_compiles():
+    out = subprocess.run([sys.executable, "-c", PP_CODE],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "PP_OK" in out.stdout

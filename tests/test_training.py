@@ -1,0 +1,148 @@
+"""Optimizer / gradient-compression / eval-metric / sampler tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training import optimizer as opt_lib
+from repro.training.compress import compress_decompress
+from repro.training.eval import recall_ndcg_at_k, topk_from_scores
+from repro.data.sampler import BPRSampler
+from repro.data.neighbor_sampler import random_regular_csr, sample_subgraph
+from repro.data import planted_coclusters
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+def _quad_problem():
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(5.0)}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    return params, loss
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: opt_lib.sgd(lr=0.1),
+    lambda: opt_lib.adamw(lr=0.3),
+    lambda: opt_lib.adafactor(lr=0.3),
+])
+def test_optimizers_descend_quadratic(maker):
+    params, loss = _quad_problem()
+    opt = maker()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adamw_bf16_params_keep_fp32_moments():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = opt_lib.adamw(lr=0.1)
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_p, state = opt.update(g, state, params)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert state["step"] == 1
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    opt = opt_lib.adafactor()
+    st_ = opt.init(params)
+    sizes = [v.size for f in st_["fac"] for v in f.values()]
+    assert sum(sizes) == 64 + 32 + 32   # vr+vc for w, v for b
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((3,))}
+    opt = opt_lib.adamw(lr=1.0, grad_clip=1e-3)
+    state = opt.init(params)
+    g = {"w": jnp.full((3,), 1e6)}
+    new_p, _ = opt.update(g, state, params)
+    assert float(jnp.abs(new_p["w"]).max()) < 2.0   # clip kept it sane
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+def test_bf16_roundtrip_close():
+    g = {"a": jnp.asarray(np.random.default_rng(0).standard_normal(512),
+                          jnp.float32)}
+    out = compress_decompress(g, "bf16")
+    err = float(jnp.abs(out["a"] - g["a"]).max())
+    assert err < 0.01
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_int8_stochastic_rounding_unbiased(seed):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.standard_normal(256) * rng.uniform(0.1, 10),
+                          jnp.float32)}
+    outs = []
+    for i in range(32):
+        out = compress_decompress(g, "int8", key=jax.random.PRNGKey(i))
+        outs.append(np.asarray(out["a"]))
+    mean = np.mean(outs, axis=0)
+    scale = float(jnp.max(jnp.abs(g["a"]))) / 127.0
+    # mean of stochastic roundings approaches the true value
+    assert np.abs(mean - np.asarray(g["a"])).max() < 1.2 * scale
+
+
+# ---------------------------------------------------------------------------
+# eval metrics
+# ---------------------------------------------------------------------------
+def test_recall_ndcg_perfect_ranking():
+    scores = np.asarray([[0.1, 0.9, 0.5, 0.0]])
+    topk = topk_from_scores(scores, k=2)
+    assert topk[0].tolist() == [1, 2]
+    m = recall_ndcg_at_k(topk, np.asarray([7]), np.asarray([1]),
+                         user_ids=np.asarray([7]), k=2)
+    assert m["recall"] == 1.0 and m["ndcg"] == 1.0
+
+
+def test_topk_excludes_train_items():
+    scores = np.asarray([[0.9, 0.8, 0.1]])
+    topk = topk_from_scores(scores, k=1, exclude=(np.asarray([0]),
+                                                  np.asarray([0])))
+    assert topk[0, 0] == 1
+
+
+# ---------------------------------------------------------------------------
+# samplers
+# ---------------------------------------------------------------------------
+def test_bpr_sampler_deterministic_resume():
+    g, _, _ = planted_coclusters(100, 80, 5, 8, seed=0)
+    s1 = BPRSampler(g, 64, seed=3)
+    batches = [s1.next_batch() for _ in range(5)]
+    s2 = BPRSampler(g, 64, seed=3)
+    s2.load_state_dict({"seed": 3, "step": 3})
+    u, p, n = s2.next_batch()
+    np.testing.assert_array_equal(u, batches[3][0])
+    np.testing.assert_array_equal(p, batches[3][1])
+    np.testing.assert_array_equal(n, batches[3][2])
+
+
+def test_bpr_negatives_differ_from_positives():
+    g, _, _ = planted_coclusters(50, 40, 4, 6, seed=1)
+    s = BPRSampler(g, 256, seed=0)
+    _, pos, neg = s.next_batch()
+    assert (pos != neg).all()
+
+
+def test_neighbor_sampler_shapes_and_locality():
+    indptr, indices = random_regular_csr(1000, 10, seed=0)
+    seeds = np.arange(32)
+    nodes, src, dst = sample_subgraph(indptr, indices, seeds, fanout=(5, 3))
+    assert src.shape == dst.shape == (32 * 5 + 32 * 5 * 3,)
+    assert nodes.shape[0] >= 32
+    assert src.max() < nodes.shape[0] and dst.max() < nodes.shape[0]
+    # seeds come first and edges point child -> parent
+    np.testing.assert_array_equal(nodes[:32], seeds)
+    assert set(dst[:32 * 5].tolist()) <= set(range(32))

@@ -275,6 +275,8 @@ def analyze_compiled(compiled) -> Dict[str, float]:
     out = analyze_hlo_text(compiled.as_text())
     try:
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+            ca = ca[0] if ca else {}
         out["xla_flops_once"] = float(ca.get("flops", -1.0))
         out["xla_bytes_once"] = float(ca.get("bytes accessed", -1.0))
     except Exception:

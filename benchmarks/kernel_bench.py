@@ -1,9 +1,19 @@
 """Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle wall-time on
 CPU is NOT a TPU signal — this bench exists to (a) exercise every kernel
 at paper-relevant shapes, (b) report the arithmetic-intensity numbers the
-TPU roofline uses (bytes moved vs FLOPs), derived analytically."""
+TPU roofline uses (bytes moved vs FLOPs), derived analytically.
+
+``python benchmarks/kernel_bench.py --json [--out rec.json]`` additionally
+sweeps every registered EmbeddingEngine backend over (B, K, d, H) codebook
+shapes and emits a JSON perf record, so the engine's auto-selection
+heuristics are measured rather than asserted (re-run on a real TPU with
+the same flag to recalibrate).
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -12,6 +22,52 @@ import numpy as np
 
 from benchmarks.common import Row
 from repro.kernels import ops, ref
+
+# paper-relevant codebook sweep: gowalla-1/4-budget-ish K, serving and
+# training batch sizes, H=1 (plain) and H=2 (SCU secondary user clusters)
+SWEEP_SHAPES = [
+    # (B, K, d, H)
+    (256, 4096, 64, 1),
+    (256, 4096, 64, 2),
+    (1024, 8192, 64, 2),
+    (512, 16384, 128, 2),
+]
+
+
+def bench_backends(shapes=None, repeats: int = 3):
+    """Per-backend codebook-lookup timings -> list of JSON-able records."""
+    from repro.embedding import EmbeddingEngine, EmbeddingSpec, \
+        available_backends
+    shapes = shapes or SWEEP_SHAPES
+    rng = np.random.default_rng(0)
+    records = []
+    for (b, k, d, h) in shapes:
+        cb = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+        sketch = jnp.asarray(rng.integers(0, k, (4 * b, h)), jnp.int32)
+        ids = jnp.asarray(rng.integers(0, 4 * b, b), jnp.int32)
+        bytes_moved = b * (h * d * 4 + d * 4 + 4 * h + 4)
+        for name in available_backends():
+            spec = EmbeddingSpec(n_rows=4 * b, dim=d, k_rows=k, n_hot=h)
+            eng = EmbeddingEngine(spec, backend=name)
+            fn = jax.jit(lambda cb, sk, i, e=eng: e.codebook_lookup(cb, sk, i))
+            try:
+                jax.block_until_ready(fn(cb, sketch, ids))   # compile
+            except Exception as exc:  # backend can't do this shape
+                records.append({"backend": name, "B": b, "K": k, "d": d,
+                                "H": h, "error": str(exc)[:200]})
+                continue
+            t0 = time.time()
+            for _ in range(repeats):
+                out = fn(cb, sketch, ids)
+            jax.block_until_ready(out)
+            us = (time.time() - t0) / repeats * 1e6
+            records.append({
+                "backend": name, "B": b, "K": k, "d": d, "H": h,
+                "us_per_call": round(us, 2),
+                "gb_moved": bytes_moved / 1e9,
+                "intensity_flops_per_byte": (b * h * d) / bytes_moved,
+            })
+    return records
 
 
 def run(fast: bool = True):
@@ -67,5 +123,29 @@ def _timeit(fn):
     return out, time.time() - t0
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="sweep EmbeddingEngine backends over (B,K,d,H) "
+                         "codebook shapes and print a JSON perf record")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON record to this path")
+    ap.add_argument("--full", action="store_true",
+                    help="full (slow) shapes for the classic kernel bench")
+    args = ap.parse_args(argv)
+    if args.json:
+        record = {"bench": "codebook_lookup_backends",
+                  "platform": jax.default_backend(),
+                  "records": bench_backends()}
+        text = json.dumps(record, indent=2)
+        print(text)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+        return 0
+    run(fast=not args.full)
+    return 0
+
+
 if __name__ == "__main__":
-    run(fast=True)
+    sys.exit(main())

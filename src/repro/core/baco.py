@@ -29,12 +29,15 @@ from . import solver_jax, solver_numpy
 __all__ = ["baco_build", "fit_gamma", "secondary_user_labels"]
 
 
-def _solve(graph, wu, wv, gamma, budget, max_iters, solver):
+def _solve(graph, wu, wv, gamma, budget, max_iters, solver,
+           init_labels=None):
     if solver == "jax":
-        return solver_jax.lp_solve(graph, wu, wv, gamma, budget, max_iters)
+        return solver_jax.lp_solve(graph, wu, wv, gamma, budget, max_iters,
+                                   init_labels=init_labels)
     if solver == "numpy":
         return solver_numpy.lp_solve_sequential(graph, wu, wv, gamma, budget,
-                                                max_iters)
+                                                max_iters,
+                                                init_labels=init_labels)
     raise ValueError(f"unknown solver {solver!r}")
 
 
@@ -47,6 +50,7 @@ def _side_counts(graph, labels):
 def fit_gamma(graph: BipartiteGraph, wu, wv, budget: int, *,
               max_iters: int = 8, solver: str = "jax",
               grid: int = 10, gamma0: float = 1.0,
+              warm_start: bool = True,
               ) -> Tuple[float, np.ndarray, int]:
     """Pick gamma on a log-grid: best bipartite modularity s.t. K <= budget.
 
@@ -59,13 +63,31 @@ def fit_gamma(graph: BipartiteGraph, wu, wv, budget: int, *,
     gamma and keep the most-modular partition that fits the budget.
     Matches the paper's protocol of tuning gamma per dataset (Table 7)
     without a validation training run.
+
+    warm_start: the grid is walked from the LARGEST gamma down, each
+    solve seeded with the previous (finer) partition instead of
+    singletons. Label propagation can only merge/relabel into existing
+    neighbor labels — it never mints new ones — so warm starts are safe
+    exactly in the fine->coarse direction: lowering gamma only asks for
+    more merging. Adjacent gammas share most of their structure, so LP
+    converges in fewer sweeps and never re-discovers the same coarse
+    clusters from scratch. The x2-refinement probes are seeded from the
+    nearest finer grid partition for the same reason
+    (tests/test_warm_start.py asserts identical-or-better modularity at
+    equal budget on the synthetic dataset).
     """
     from .metrics import bipartite_modularity
     gammas = [float(gamma0) * (4.0 ** i) for i in range(-3, grid - 3)]
     best = None          # (modularity, gamma, labels, iters)
     fallback = None      # (K, gamma, labels, iters) closest above budget
-    for g in gammas:
-        labels, it = _solve(graph, wu, wv, g, budget, max_iters, solver)
+    prev = None          # previous (finer) grid partition, warm-start seed
+    grid_labels = {}     # gamma -> labels, for seeding the refinement
+    for g in sorted(gammas, reverse=True):
+        labels, it = _solve(graph, wu, wv, g, budget, max_iters, solver,
+                            init_labels=prev if warm_start else None)
+        if warm_start:
+            prev = labels
+        grid_labels[g] = labels
         ku, kv = _side_counts(graph, labels)
         k = ku + kv
         if k <= budget:
@@ -79,7 +101,12 @@ def fit_gamma(graph: BipartiteGraph, wu, wv, budget: int, *,
         return g, labels, it
     # refinement: the grid is x4-spaced; probe the x2 neighbours
     for g in (best[1] * 2.0, best[1] / 2.0):
-        labels, it = _solve(graph, wu, wv, g, budget, max_iters, solver)
+        seed = None
+        if warm_start:
+            finer = [gg for gg in grid_labels if gg > g]
+            seed = grid_labels[min(finer)] if finer else None
+        labels, it = _solve(graph, wu, wv, g, budget, max_iters, solver,
+                            init_labels=seed)
         ku, kv = _side_counts(graph, labels)
         if ku + kv <= budget:
             q = bipartite_modularity(graph, labels)

@@ -21,27 +21,30 @@ __all__ = ["lp_solve_sequential"]
 def lp_solve_sequential(graph: BipartiteGraph, w_users: np.ndarray,
                         w_items: np.ndarray, gamma: float,
                         budget: int | None = None, max_iters: int = 8,
+                        init_labels: np.ndarray | None = None,
                         ) -> Tuple[np.ndarray, int]:
-    """Algorithm 1. Returns (labels int32[n_nodes] shared id space, iters)."""
+    """Algorithm 1. Returns (labels int32[n_nodes] shared id space, iters).
+
+    init_labels warm-starts the sweep from a previous partition (e.g. the
+    neighbouring gamma grid point in fit_gamma) instead of singletons.
+    """
     nu, nv = graph.n_users, graph.n_items
     n = nu + nv
     u_indptr, u_nbrs = graph.user_csr()     # user -> item neighbors
     v_indptr, v_nbrs = graph.item_csr()     # item -> user neighbors
-    labels = np.arange(n, dtype=np.int64)
+    if init_labels is None:
+        labels = np.arange(n, dtype=np.int64)
+    else:
+        labels = np.asarray(init_labels, np.int64).copy()
     # global per-label weight sums, updated incrementally on every move
     w_u_by_label = np.zeros(n, dtype=np.float64)
-    w_u_by_label[labels[:nu]] = w_users
+    np.add.at(w_u_by_label, labels[:nu], w_users)
     w_v_by_label = np.zeros(n, dtype=np.float64)
-    w_v_by_label[labels[nu:]] = w_items
+    np.add.at(w_v_by_label, labels[nu:], w_items)
 
     gamma = float(gamma)
     it = 0
     for it in range(1, max_iters + 1):
-        if budget is not None:
-            ku = np.unique(labels[:nu]).size
-            kv = np.unique(labels[nu:]).size
-            if ku + kv <= budget:
-                break
         moved = 0
         # ---- users (Eq. 13) ------------------------------------------------
         for i in range(nu):
@@ -79,4 +82,12 @@ def lp_solve_sequential(graph: BipartiteGraph, w_users: np.ndarray,
                 moved += 1
         if moved == 0:
             break
+        # budget check AFTER the sweep (matches solver_jax): a warm-start
+        # seed already within budget must still feel this gamma at least
+        # once, else the whole grid collapses onto the seed partition
+        if budget is not None:
+            ku = np.unique(labels[:nu]).size
+            kv = np.unique(labels[nu:]).size
+            if ku + kv <= budget:
+                break
     return labels.astype(np.int32), it

@@ -1,5 +1,10 @@
-from .tables import (EmbeddingSpec, init_embedding, embed_lookup,
-                     init_codebook, codebook_lookup, embedding_bag)
+from .engine import (EmbeddingEngine, EmbeddingSpec, LookupBackend,
+                     available_backends, embedding_lookup, get_backend,
+                     register_backend)
+from .tables import (init_embedding, embed_lookup, init_codebook,
+                     codebook_lookup, embedding_bag)
 
-__all__ = ["EmbeddingSpec", "init_embedding", "embed_lookup",
+__all__ = ["EmbeddingSpec", "EmbeddingEngine", "LookupBackend",
+           "available_backends", "embedding_lookup", "get_backend",
+           "register_backend", "init_embedding", "embed_lookup",
            "init_codebook", "codebook_lookup", "embedding_bag"]

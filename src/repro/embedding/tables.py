@@ -1,45 +1,22 @@
-"""Embedding table substrate: full, compressed (codebook+sketch), bag.
+"""Embedding table substrate: init helpers + legacy lookup entry points.
 
 This is the layer the paper compresses. All lookups are pure functions of
 (params, statics, ids) so the same code paths jit/pjit under any mesh.
 
-Lookup strategies (perf lever, see EXPERIMENTS.md §Perf):
-  * "gather": jnp.take — default; lowers to dynamic-gather.
-  * "onehot": one-hot matmul — MXU-friendly for small codebooks, and on
-    row-sharded tables it turns the lookup into a local GEMM + psum
-    instead of a gather + all-to-all.
+The lookup implementations live in `engine.py` (backend registry:
+"gather" | "onehot" | "pallas"); the functions here are thin wrappers kept
+for the examples and early call sites. New code should build an
+`EmbeddingEngine` directly — models and launchers all do.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.distributed.sharding import shard
+from .engine import EmbeddingEngine, EmbeddingSpec
 
 __all__ = ["EmbeddingSpec", "init_embedding", "embed_lookup",
            "init_codebook", "codebook_lookup", "embedding_bag"]
-
-
-@dataclasses.dataclass(frozen=True)
-class EmbeddingSpec:
-    """Static description of one (possibly compressed) table."""
-    n_rows: int                 # logical vocabulary size
-    dim: int
-    k_rows: Optional[int] = None    # codebook rows if compressed
-    n_hot: int = 1                  # sketch multiplicity (SCU/double -> 2)
-    combine: str = "sum"
-
-    @property
-    def compressed(self) -> bool:
-        return self.k_rows is not None
-
-    @property
-    def table_rows(self) -> int:
-        return self.k_rows if self.compressed else self.n_rows
 
 
 def init_embedding(key, n_rows: int, dim: int, scale: float = 0.1,
@@ -53,12 +30,15 @@ def init_codebook(key, k_rows: int, dim: int, scale: float = 0.1,
     return init_embedding(key, k_rows, dim, scale, dtype)
 
 
+def _engine(table, via: str, k_rows=None, n_hot: int = 1) -> EmbeddingEngine:
+    spec = EmbeddingSpec(n_rows=int(table.shape[0]), dim=int(table.shape[-1]),
+                         k_rows=k_rows, n_hot=n_hot)
+    return EmbeddingEngine(spec, backend=via)
+
+
 def embed_lookup(table, ids, *, via: str = "gather"):
     """Full-table lookup. table [N, d] (row-sharded over 'model'), ids [...]."""
-    if via == "onehot":
-        oh = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
-        return oh @ table
-    return jnp.take(table, ids, axis=0)
+    return _engine(table, via).full_lookup(table, ids)
 
 
 def codebook_lookup(codebook, sketch_idx, ids, *, combine: str = "sum",
@@ -68,33 +48,18 @@ def codebook_lookup(codebook, sketch_idx, ids, *, combine: str = "sum",
     codebook:   [K, d]
     sketch_idx: int32 [N, H]  (static artifact of the ETC method)
     ids:        int32 [...]
-    returns [..., d]
+    returns [..., d]; duplicate sketch indices contribute once (binary Y).
     """
-    rows_idx = jnp.take(sketch_idx, ids, axis=0)          # [..., H]
-    if via == "onehot":
-        oh = jax.nn.one_hot(rows_idx, codebook.shape[0], dtype=codebook.dtype)
-        out = jnp.einsum("...hk,kd->...hd", oh, codebook)
-    else:
-        out = jnp.take(codebook, rows_idx, axis=0)        # [..., H, d]
-    # Y is BINARY (paper §3.2): a duplicate index (e.g. SCU falling back
-    # to the primary cluster) contributes once, not twice
-    h = rows_idx.shape[-1]
-    if h > 1:
-        dup = jnp.zeros(rows_idx.shape, bool)
-        for i in range(1, h):
-            for j in range(i):
-                dup = dup.at[..., i].set(
-                    dup[..., i] | (rows_idx[..., i] == rows_idx[..., j]))
-        out = jnp.where(dup[..., None], 0, out)
-    if combine == "sum":
-        return out.sum(axis=-2)
-    if combine == "mean":
-        return out.mean(axis=-2)
-    raise ValueError(f"unknown combine {combine!r}")
+    spec = EmbeddingSpec(n_rows=int(sketch_idx.shape[0]),
+                         dim=int(codebook.shape[-1]),
+                         k_rows=int(codebook.shape[0]),
+                         n_hot=int(sketch_idx.shape[-1]))
+    return EmbeddingEngine(spec, backend=via).codebook_lookup(
+        codebook, sketch_idx, ids, combine=combine)
 
 
 def embedding_bag(table, values, segment_ids, num_segments: int,
-                  mode: str = "sum", weights=None):
+                  mode: str = "sum", weights=None, *, via: str = "gather"):
     """torch.nn.EmbeddingBag equivalent (JAX has none — built here).
 
     table:       [N, d]
@@ -102,14 +67,6 @@ def embedding_bag(table, values, segment_ids, num_segments: int,
     segment_ids: int32 [nnz]   bag id per value (sorted preferred)
     returns [num_segments, d]
     """
-    rows = jnp.take(table, values, axis=0)
-    if weights is not None:
-        rows = rows * weights[:, None]
-    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
-    if mode == "mean":
-        cnt = jax.ops.segment_sum(jnp.ones_like(values, dtype=rows.dtype),
-                                  segment_ids, num_segments=num_segments)
-        out = out / jnp.maximum(cnt, 1.0)[:, None]
-    elif mode != "sum":
-        raise ValueError(f"unknown mode {mode!r}")
-    return out
+    return _engine(table, via).bag_lookup(table, values, segment_ids,
+                                          num_segments, mode=mode,
+                                          weights=weights)

@@ -5,13 +5,21 @@ Serving/training retrieves  e_i = Σ_h Z[sketch[i, h]]  for a batch of ids
 A naive XLA lowering issues H separate gathers plus an add, touching the
 output twice. This kernel uses scalar-prefetched sketch indices to DMA the
 H codebook rows for each output tile straight into VMEM and writes the
-combined row once.
+combined tile once.
 
-Layout: the codebook stays in HBM; the grid walks output rows in tiles of
-``rows_per_step``; per grid step the BlockSpec index_map (driven by the
-prefetched indices) pulls exactly the needed codebook rows. The embedding
-dim is the lane dimension (pad to 128 for peak DMA efficiency; any d is
-accepted).
+Layout: the codebook is passed ONCE and stays in HBM; the grid is
+(B/rows_per_step, rows_per_step, H) — per grid step the input BlockSpec
+index_map (driven by the prefetched indices) pulls exactly one needed
+codebook row, while the OUTPUT block covers ``rows_per_step`` rows and is
+revisited for every (row, h) step of its tile (Pallas keeps revisited
+blocks resident), so each output tile is written back to HBM exactly once.
+The embedding dim is the lane dimension (pad to 128 for peak DMA
+efficiency; any d is accepted).
+
+``binary=True`` applies the paper's binary-Y rule in-kernel: a duplicate
+sketch index (e.g. SCU falling back to the primary cluster) contributes
+once, not twice. The duplicate test reads the prefetched scalars, so no
+extra tensor input is needed.
 """
 from __future__ import annotations
 
@@ -25,41 +33,58 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["codebook_lookup_pallas"]
 
 
-def _kernel(idx_ref, *refs, n_hot: int):
-    # refs = (row_ref_0 ... row_ref_{H-1}, out_ref)
-    out_ref = refs[-1]
-    acc = refs[0][...]
-    for h in range(1, n_hot):
-        acc = acc + refs[h][...]
-    out_ref[...] = acc.astype(out_ref.dtype)
+def _kernel(idx_ref, row_ref, out_ref, *, n_hot: int, rows_per_step: int,
+            binary: bool):
+    i = pl.program_id(0)
+    r = pl.program_id(1)
+    h = pl.program_id(2)
+    row = i * rows_per_step + r
+
+    @pl.when(h == 0)
+    def _():
+        out_ref[r, :] = jnp.zeros_like(out_ref[r, :])
+
+    contrib = row_ref[0, :].astype(out_ref.dtype)
+    if binary and n_hot > 1:
+        cur = idx_ref[row, h]
+        dup = jnp.zeros((), jnp.bool_)
+        for j in range(n_hot - 1):        # j < h <= n_hot-1
+            dup = dup | ((j < h) & (idx_ref[row, j] == cur))
+        contrib = jnp.where(dup, jnp.zeros_like(contrib), contrib)
+    out_ref[r, :] += contrib
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def codebook_lookup_pallas(codebook, idx, *, interpret: bool = True):
+@functools.partial(jax.jit,
+                   static_argnames=("binary", "rows_per_step", "interpret"))
+def codebook_lookup_pallas(codebook, idx, *, binary: bool = False,
+                           rows_per_step: int = 8, interpret: bool = True):
     """codebook [K, d], idx int32 [B, H] -> [B, d].
 
-    One grid step per output row; H codebook-row blocks are prefetched via
-    the scalar idx so the DMA pipeline overlaps fetch h of row i+1 with
-    compute of row i.
+    The H row-blocks of each output row are prefetched via the scalar idx
+    so the DMA pipeline overlaps fetch (row i+1, h) with compute of row i;
+    rows_per_step output rows share one VMEM-resident output block.
     """
     b, h = idx.shape
     k, d = codebook.shape
+    r = max(1, min(rows_per_step, b))
+    b_pad = ((b + r - 1) // r) * r
+    idx_padded = idx if b_pad == b else jnp.pad(idx, ((0, b_pad - b), (0, 0)))
 
-    in_specs = [
-        pl.BlockSpec((1, d), functools.partial(
-            lambda i, idx_ref, hh: (idx_ref[i, hh], 0), hh=hh))
-        for hh in range(h)
-    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(b,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+        grid=(b_pad // r, r, h),
+        in_specs=[
+            pl.BlockSpec((1, d), functools.partial(
+                lambda i, rr, hh, idx_ref, r_: (idx_ref[i * r_ + rr, hh], 0),
+                r_=r)),
+        ],
+        out_specs=pl.BlockSpec((r, d), lambda i, rr, hh, idx_ref: (i, 0)),
     )
     fn = pl.pallas_call(
-        functools.partial(_kernel, n_hot=h),
+        functools.partial(_kernel, n_hot=h, rows_per_step=r, binary=binary),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, d), codebook.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_pad, d), codebook.dtype),
         interpret=interpret,
     )
-    return fn(idx, *([codebook] * h))
+    out = fn(idx_padded, codebook)
+    return out if b_pad == b else out[:b]

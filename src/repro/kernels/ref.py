@@ -5,12 +5,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["codebook_lookup", "embedding_bag", "dot_interaction", "mha"]
+__all__ = ["codebook_lookup", "codebook_lookup_dedup", "embedding_bag",
+           "dot_interaction", "mha"]
 
 
 def codebook_lookup(codebook, idx):
     """codebook [K, d], idx int32 [B, H] -> [B, d] = Σ_h Z[idx[:, h]]."""
     return jnp.take(codebook, idx, axis=0).sum(axis=1)
+
+
+def codebook_lookup_dedup(codebook, idx):
+    """Binary-Y variant (paper §3.2): duplicate indices within a row
+    contribute once. Deliberately-dumb numpy loop — the oracle the
+    EmbeddingEngine backends are tested against."""
+    cb = np.asarray(codebook, np.float32)
+    ix = np.asarray(idx)
+    out = np.zeros((ix.shape[0], cb.shape[1]), np.float32)
+    for b in range(ix.shape[0]):
+        for k in dict.fromkeys(int(v) for v in ix[b]):    # unique, ordered
+            out[b] += cb[k]
+    return jnp.asarray(out)
 
 
 def embedding_bag(table, values, segment_ids, num_segments):

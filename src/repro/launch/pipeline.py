@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+from repro.embedding import embedding_lookup
 from repro.models import transformer as T
 from repro.training import optimizer as opt_lib
 
@@ -144,7 +146,7 @@ def build_pp_train_cell(cfg: T.TransformerConfig, *, global_batch: int,
                 safe = jnp.clip(mb_id, 0, n_micro - 1)
                 # stage 0 injects fresh embeddings
                 tok = jax.lax.dynamic_index_in_dim(tk, safe, 0, False)
-                emb = jnp.take(embed, tok, axis=0).astype(cfg.jdtype)
+                emb = embedding_lookup(embed, tok, backend=cfg.lookup_backend).astype(cfg.jdtype)
                 if cfg.embed_scale:
                     emb = emb * np.sqrt(cfg.d_model)
                 x_in = jnp.where(j == 0, emb, x_recv)
@@ -154,21 +156,27 @@ def build_pp_train_cell(cfg: T.TransformerConfig, *, global_batch: int,
                 # the vocab matmul runs only when taken)
                 tgt = jax.lax.dynamic_index_in_dim(tg, safe, 0, False)
                 take = valid & (j == n_stages - 1)
+                # loss rides in a rank-1 (1,) buffer: shard_map transpose
+                # cannot emit device-varying RANK-0 residuals (it has no
+                # axis to concatenate over), and this accumulator is
+                # device-varying by construction (axis_index-gated)
                 l = jax.lax.cond(
                     take,
-                    lambda: _ce(p_local, T.rms_norm(x_out, final_norm), tgt),
-                    lambda: jnp.float32(0.0))
+                    lambda: _ce(p_local, T.rms_norm(x_out, final_norm),
+                                tgt).reshape(1),
+                    lambda: jnp.zeros((1,), jnp.float32))
                 loss_acc = loss_acc + l
                 x_send = jax.lax.ppermute(x_out, "model", perm)
                 return (x_send, loss_acc), None
 
             x0 = jnp.zeros((mb_local, seq, d), cfg.jdtype)
             (_, loss_sum), _ = jax.lax.scan(
-                tick, (x0, jnp.float32(0.0)), jnp.arange(n_ticks))
+                tick, (x0, jnp.zeros((1,), jnp.float32)),
+                jnp.arange(n_ticks))
             # stage-15's sum -> everyone; mean over data shards & tokens
             loss_sum = jax.lax.psum(loss_sum, "model")
             loss_sum = jax.lax.pmean(loss_sum, "data")
-            return loss_sum / (n_micro * mb_local * seq)
+            return loss_sum[0] / (n_micro * mb_local * seq)
 
         # embed/lm_head are STORED data-sharded (ZeRO-style) but the
         # lookup needs full tables per device -> replicated in_specs
@@ -180,8 +188,8 @@ def build_pp_train_cell(cfg: T.TransformerConfig, *, global_batch: int,
         if "lm_head" in params:
             in_specs.append(P(None, None))
             args.append(params["lm_head"])
-        fn = jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
-                           out_specs=P(), check_vma=False)
+        fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                       out_specs=P())
         return fn(*args)
 
     def train_step(params, opt_state, b):

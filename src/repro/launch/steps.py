@@ -185,8 +185,11 @@ def _lm_optimizer(cfg):
     return "adamw", opt_lib.adamw(lr=3e-4, grad_clip=1.0)
 
 
-def _lm_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
+def _lm_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool,
+             lookup_backend=None) -> Cell:
     cfg = spec.smoke_config() if smoke else spec.full_config()
+    if lookup_backend is not None:
+        cfg = dataclasses.replace(cfg, lookup_backend=lookup_backend)
     dims = shape.dims
     mapping = dims.get("mapping", "tp")
     with logical_mapping(mapping):
@@ -331,8 +334,11 @@ def _gnn_param_axes(params):
     return _replicated_axes_like(params)   # SchNet params are tiny
 
 
-def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
+def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool,
+              lookup_backend=None) -> Cell:
     base = spec.smoke_config() if smoke else spec.full_config()
+    if lookup_backend is not None:
+        base = dataclasses.replace(base, lookup_backend=lookup_backend)
     dims = dict(shape.dims)
     if smoke:
         scale = {"full_graph_sm": (64, 256), "minibatch_lg": (128, 512),
@@ -433,8 +439,11 @@ def _recsys_statics(cfg, mesh, smoke: bool):
     return statics
 
 
-def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
+def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool,
+                 lookup_backend=None) -> Cell:
     cfg = spec.smoke_config() if smoke else spec.full_config()
+    if lookup_backend is not None:
+        cfg = dataclasses.replace(cfg, lookup_backend=lookup_backend)
     dims = dict(shape.dims)
     if smoke:
         dims["batch"] = 1 if shape.kind == "retrieval" else 8
@@ -557,8 +566,11 @@ def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
 # ---------------------------------------------------------------------------
 # CF family (the paper's LightGCN pipeline)
 # ---------------------------------------------------------------------------
-def _cf_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool) -> Cell:
+def _cf_cell(spec: ArchSpec, shape: ShapeSpec, mesh, smoke: bool,
+             lookup_backend=None) -> Cell:
     cfg = spec.smoke_config() if smoke else spec.full_config()
+    if lookup_backend is not None:
+        cfg = dataclasses.replace(cfg, lookup_backend=lookup_backend)
     batch = 8 if smoke else shape.dims["batch"]
     nu, nv = cfg.n_users, cfg.n_items
     e = max(4 * (nu + nv), 1024)
@@ -620,10 +632,14 @@ _FAMILY = {"lm": _lm_cell, "gnn": _gnn_cell, "recsys": _recsys_cell,
 
 
 def build_cell(arch_id: str, shape_name: str, mesh: Optional[Mesh] = None,
-               smoke: bool = False) -> Cell:
+               smoke: bool = False,
+               lookup_backend: Optional[str] = None) -> Cell:
+    """lookup_backend: explicit EmbeddingEngine backend override
+    ("gather" | "onehot" | "pallas"); None -> per-platform auto-select."""
     spec = get_arch(arch_id)
     shape = spec.shape(shape_name)
-    cell = _FAMILY[spec.family](spec, shape, mesh, smoke)
+    cell = _FAMILY[spec.family](spec, shape, mesh, smoke,
+                                lookup_backend=lookup_backend)
     if smoke:
         cell = dataclasses.replace(cell, args=_materialize(cell.args))
     return cell

@@ -17,10 +17,10 @@ import numpy as np
 
 from repro.core.graph import BipartiteGraph
 from repro.core.sketch import Sketch
-from repro.embedding import init_codebook, codebook_lookup
+from repro.embedding import EmbeddingEngine, EmbeddingSpec, init_codebook
 
-__all__ = ["LightGCNConfig", "make_statics", "init_params", "all_embeddings",
-           "bpr_loss_fn", "score_all_items"]
+__all__ = ["LightGCNConfig", "from_sketch", "engines", "make_statics",
+           "init_params", "all_embeddings", "bpr_loss_fn", "score_all_items"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,15 +34,32 @@ class LightGCNConfig:
     k_users: Optional[int] = None
     k_items: Optional[int] = None
     n_hot_users: int = 1
+    # explicit EmbeddingEngine backend; None -> auto-select by platform
+    lookup_backend: Optional[str] = None
 
 
 def from_sketch(graph: BipartiteGraph, sketch: Optional[Sketch], dim=64,
-                n_layers=3, l2=1e-4) -> "LightGCNConfig":
+                n_layers=3, l2=1e-4,
+                lookup_backend: Optional[str] = None) -> "LightGCNConfig":
     if sketch is None:
-        return LightGCNConfig(graph.n_users, graph.n_items, dim, n_layers, l2)
+        return LightGCNConfig(graph.n_users, graph.n_items, dim, n_layers, l2,
+                              lookup_backend=lookup_backend)
     return LightGCNConfig(graph.n_users, graph.n_items, dim, n_layers, l2,
                           k_users=sketch.k_users, k_items=sketch.k_items,
-                          n_hot_users=sketch.user_idx.shape[1])
+                          n_hot_users=sketch.user_idx.shape[1],
+                          lookup_backend=lookup_backend)
+
+
+def engines(cfg: LightGCNConfig):
+    """(user, item) EmbeddingEngines for this config's tables."""
+    u = EmbeddingEngine(EmbeddingSpec(cfg.n_users, cfg.dim,
+                                      k_rows=cfg.k_users,
+                                      n_hot=cfg.n_hot_users),
+                        backend=cfg.lookup_backend)
+    v = EmbeddingEngine(EmbeddingSpec(cfg.n_items, cfg.dim,
+                                      k_rows=cfg.k_items),
+                        backend=cfg.lookup_backend)
+    return u, v
 
 
 def make_statics(graph: BipartiteGraph, sketch: Optional[Sketch] = None):
@@ -72,10 +89,11 @@ def init_params(key, cfg: LightGCNConfig, scale: float = 0.1):
 def _base_embeddings(params, statics, cfg: LightGCNConfig):
     """Materialize E0 = [Y_u Z_u ; Y_v Z_v] (or the full tables)."""
     if cfg.k_users is not None:
-        u = codebook_lookup(params["user_table"], statics["sketch_u"],
-                            jnp.arange(cfg.n_users))
-        v = codebook_lookup(params["item_table"], statics["sketch_v"],
-                            jnp.arange(cfg.n_items))
+        u_eng, v_eng = engines(cfg)
+        u = u_eng.codebook_lookup(params["user_table"], statics["sketch_u"],
+                                  jnp.arange(cfg.n_users))
+        v = v_eng.codebook_lookup(params["item_table"], statics["sketch_v"],
+                                  jnp.arange(cfg.n_items))
         return u, v
     return params["user_table"], params["item_table"]
 

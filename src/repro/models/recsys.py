@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import shard
-from repro.embedding import codebook_lookup
+from repro.embedding import EmbeddingEngine, EmbeddingSpec
 
 __all__ = ["DLRMConfig", "WideDeepConfig", "SASRecConfig", "BERT4RecConfig",
            "MLPERF_CRITEO_VOCABS"]
@@ -70,11 +70,19 @@ def _table_rows(vocab: int, etc_ratio: Optional[float],
     return vocab
 
 
-def _field_lookup(table, ids, sketch=None):
-    """[..., d]; sketch int32[vocab, H] when the field is compressed."""
+def _field_lookup(table, ids, sketch=None, backend=None):
+    """[..., d]; sketch int32[vocab, H] when the field is compressed.
+    All lookups route through the EmbeddingEngine (backend-dispatched)."""
     if sketch is not None:
-        return codebook_lookup(table, sketch, ids)
-    return jnp.take(table, ids, axis=0)
+        spec = EmbeddingSpec(n_rows=int(sketch.shape[0]),
+                             dim=int(table.shape[-1]),
+                             k_rows=int(table.shape[0]),
+                             n_hot=int(sketch.shape[-1]))
+    else:
+        spec = EmbeddingSpec(n_rows=int(table.shape[0]),
+                             dim=int(table.shape[-1]))
+    return EmbeddingEngine(spec, backend=backend).lookup(table, ids,
+                                                         sketch=sketch)
 
 
 def _bce(logits, labels):
@@ -97,6 +105,7 @@ class DLRMConfig:
     etc_ratio: Optional[float] = None       # BACO variant sets e.g. 0.25
     compress_min: int = 100_000
     dtype: str = "float32"
+    lookup_backend: Optional[str] = None    # EmbeddingEngine override
 
     @property
     def n_sparse(self):
@@ -129,7 +138,7 @@ def _dlrm_features(params, statics, dense, sparse, cfg: DLRMConfig):
     for f in range(cfg.n_sparse):
         sk = statics.get(f"sketch_{f}") if statics else None
         t = shard(params[f"emb_{f}"], "vocab", None)
-        embs.append(_field_lookup(t, sparse[:, f], sk))
+        embs.append(_field_lookup(t, sparse[:, f], sk, cfg.lookup_backend))
     z = jnp.stack(embs, axis=1)                              # [B, F+1, d]
     z = shard(z, "batch", None, None)
     inter = jnp.einsum("bfd,bgd->bfg", z, z)                 # dot interaction
@@ -181,6 +190,7 @@ class WideDeepConfig:
     etc_ratio: Optional[float] = None
     compress_min: int = 100_000
     dtype: str = "float32"
+    lookup_backend: Optional[str] = None
 
     @property
     def n_sparse(self):
@@ -214,9 +224,10 @@ def widedeep_forward(params, statics, batch, cfg: WideDeepConfig):
     for f in range(cfg.n_sparse):
         sk = statics.get(f"sketch_{f}") if statics else None
         t = shard(params[f"emb_{f}"], "vocab", None)
-        embs.append(_field_lookup(t, sparse[:, f], sk))
+        embs.append(_field_lookup(t, sparse[:, f], sk, cfg.lookup_backend))
         w = shard(params[f"wide_{f}"], "vocab", None)
-        wide = wide + _field_lookup(w, sparse[:, f], sk)[:, 0]
+        wide = wide + _field_lookup(w, sparse[:, f], sk,
+                                    cfg.lookup_backend)[:, 0]
     deep_in = shard(jnp.concatenate(embs, axis=-1), "batch", None)
     deep = _mlp(params["deep"], deep_in)[:, 0]
     return wide + deep
@@ -248,6 +259,7 @@ class SASRecConfig:
     etc_ratio: Optional[float] = None
     dtype: str = "float32"
     causal: bool = True
+    lookup_backend: Optional[str] = None
 
     @property
     def table_rows(self):
@@ -301,7 +313,7 @@ def _ln(x, scale, eps=1e-6):
 def _item_lookup(params, statics, ids, cfg):
     table = shard(params["item_emb"], "vocab", None)
     sk = statics.get("sketch_items") if statics else None
-    return _field_lookup(table, ids, sk)
+    return _field_lookup(table, ids, sk, cfg.lookup_backend)
 
 
 def seqrec_encode(params, statics, seq_ids, cfg: SASRecConfig):

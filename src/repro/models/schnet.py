@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import shard
+from repro.embedding import embedding_lookup
 
 __all__ = ["SchNetConfig", "init_params", "energy", "train_loss"]
 
@@ -34,6 +35,7 @@ class SchNetConfig:
     d_feat: int = 0      # >0: dense node features projected in (graph
                          # benchmarks à la Cora/Reddit) instead of Z-embed
     dtype: str = "float32"
+    lookup_backend: "str | None" = None   # EmbeddingEngine override
 
     @property
     def jdtype(self):
@@ -98,7 +100,7 @@ def energy(params, batch, cfg: SchNetConfig, n_graphs: int = 1):
     else:
         z = batch["z"]
         n = z.shape[0]
-        x = jnp.take(params["embed"], z, axis=0).astype(cfg.jdtype)
+        x = embedding_lookup(params["embed"], z, backend=cfg.lookup_backend).astype(cfg.jdtype)
     x = shard(x, "batch", None)
     rbf = _rbf_expand(dist, cfg).astype(cfg.jdtype)
     fcut = _cosine_cutoff(dist, cfg.cutoff).astype(cfg.jdtype)
@@ -133,7 +135,7 @@ def node_train_loss(params, batch, cfg: SchNetConfig):
     else:
         z = batch["z"]
         n = z.shape[0]
-        x = jnp.take(params["embed"], z, axis=0).astype(cfg.jdtype)
+        x = embedding_lookup(params["embed"], z, backend=cfg.lookup_backend).astype(cfg.jdtype)
     x = shard(x, "batch", None)
     rbf = _rbf_expand(dist, cfg).astype(cfg.jdtype)
     fcut = _cosine_cutoff(dist, cfg.cutoff).astype(cfg.jdtype)

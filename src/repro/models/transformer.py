@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.sharding import shard
+from repro.distributed.sharding import shard, shard_map
+from repro.embedding import embedding_lookup
 
 __all__ = ["TransformerConfig", "init_params", "param_logical_axes",
            "train_loss", "prefill", "decode_step", "init_cache",
@@ -74,6 +75,8 @@ class TransformerConfig:
     remat: bool = True
     moe_impl: str = "local"                 # "local" shard_map dispatch or
                                             # "gspmd" scatter (perf baseline)
+    lookup_backend: Optional[str] = None    # EmbeddingEngine override for
+                                            # the token-embedding lookup
 
     @property
     def hd(self) -> int:
@@ -405,9 +408,9 @@ def _mlp_moe_local(x, lp, li, cfg):
         y = jax.lax.psum(y, "model")                    # combine experts
         return y.reshape(bl, sl, d).astype(xb.dtype)
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(bspec, rspec, wspec, wspec, wspec),
-                       out_specs=bspec, check_vma=False)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(bspec, rspec, wspec, wspec, wspec),
+                   out_specs=bspec)
     return fn(x, router, wg, wu, wd)
 
 
@@ -482,7 +485,7 @@ def _block(x, blk_params, cfg, positions):
 # forward passes
 # ---------------------------------------------------------------------------
 def _backbone(params, tokens, cfg, positions):
-    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jdtype)
+    x = embedding_lookup(params["embed"], tokens, backend=cfg.lookup_backend).astype(cfg.jdtype)
     if cfg.embed_scale:
         x = x * np.sqrt(cfg.d_model)
     x = shard(x, "batch", None, None)
@@ -579,7 +582,7 @@ def decode_step(params, cache, batch, cfg: TransformerConfig):
     tokens, pos = batch["tokens"], batch["pos"]
     b = tokens.shape[0]
     positions = jnp.full((b, 1), pos, dtype=jnp.int32)
-    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jdtype)
+    x = embedding_lookup(params["embed"], tokens, backend=cfg.lookup_backend).astype(cfg.jdtype)
     if cfg.embed_scale:
         x = x * np.sqrt(cfg.d_model)
 
@@ -649,7 +652,7 @@ def prefill(params, batch, cfg: TransformerConfig, max_seq: int):
     tokens = batch["tokens"]
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jdtype)
+    x = embedding_lookup(params["embed"], tokens, backend=cfg.lookup_backend).astype(cfg.jdtype)
     if cfg.embed_scale:
         x = x * np.sqrt(cfg.d_model)
     x = shard(x, "batch", None, None)

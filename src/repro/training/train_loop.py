@@ -38,6 +38,8 @@ class TrainConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 100
     eval_k: int = 20
+    # EmbeddingEngine backend for all table lookups (None -> auto)
+    lookup_backend: Optional[str] = None
 
 
 class Trainer:
@@ -46,7 +48,8 @@ class Trainer:
         self.graph = graph
         self.cfg = cfg
         self.mcfg = L.from_sketch(graph, sketch, dim=cfg.dim,
-                                  n_layers=cfg.n_layers, l2=cfg.l2)
+                                  n_layers=cfg.n_layers, l2=cfg.l2,
+                                  lookup_backend=cfg.lookup_backend)
         self.statics = L.make_statics(graph, sketch)
         self.sampler = BPRSampler(graph, cfg.batch_size, seed=cfg.seed)
         self.optimizer = opt_lib.adamw(lr=cfg.lr)

@@ -1,7 +1,11 @@
 """Core BACO tests: solver equivalences, objective behaviour, SCU, sketch."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# property tests below need hypothesis; skip the module (not the suite)
+# when the container doesn't ship it
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (BipartiteGraph, Sketch, baco_build, build_sketch,
                         compact_labels, fit_gamma, make_weights,

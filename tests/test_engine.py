@@ -1,0 +1,242 @@
+"""EmbeddingEngine: backend parity vs kernels/ref.py oracles, auto-select
+heuristics, and the grep-based architecture rule that no model/launch
+module bypasses the engine."""
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.embedding import (EmbeddingEngine, EmbeddingSpec,
+                             available_backends, embedding_lookup)
+from repro.kernels import ref
+
+RNG = np.random.default_rng(7)
+BACKENDS = ("gather", "onehot", "pallas")
+
+
+def _engine(spec, backend):
+    return EmbeddingEngine(spec, backend=backend)
+
+
+def test_all_backends_registered():
+    assert set(BACKENDS) <= set(available_backends())
+
+
+# ---------------------------------------------------------------------------
+# full-table lookups
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n,d,b", [(32, 16, 7), (128, 64, 33)])
+def test_full_parity(backend, n, d, b):
+    table = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, n, b), jnp.int32)
+    eng = _engine(EmbeddingSpec(n_rows=n, dim=d), backend)
+    out = eng.full_lookup(table, ids)
+    assert_allclose(np.asarray(out), np.asarray(jnp.take(table, ids, axis=0)),
+                    rtol=1e-6, atol=1e-6)
+
+
+def test_full_lookup_2d_ids():
+    table = jnp.asarray(RNG.standard_normal((20, 8)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, 20, (4, 5)), jnp.int32)
+    for backend in BACKENDS:
+        out = embedding_lookup(table, ids, backend=backend)
+        assert out.shape == (4, 5, 8)
+        assert_allclose(np.asarray(out),
+                        np.asarray(jnp.take(table, ids, axis=0)),
+                        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# codebook lookups (H=1 and H=2 with forced duplicate sketch indices)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("h", [1, 2])
+def test_codebook_parity(backend, h):
+    k, d, n, b = 24, 32, 50, 17
+    cb = jnp.asarray(RNG.standard_normal((k, d)), jnp.float32)
+    sketch = np.asarray(RNG.integers(0, k, (n, h)), np.int32)
+    if h == 2:
+        sketch[::3, 1] = sketch[::3, 0]     # force SCU-style duplicates
+    sketch = jnp.asarray(sketch)
+    ids = jnp.asarray(RNG.integers(0, n, b), jnp.int32)
+    spec = EmbeddingSpec(n_rows=n, dim=d, k_rows=k, n_hot=h)
+    out = _engine(spec, backend).codebook_lookup(cb, sketch, ids)
+    rows_idx = np.asarray(sketch)[np.asarray(ids)]
+    expected = ref.codebook_lookup_dedup(cb, rows_idx)
+    assert_allclose(np.asarray(out), np.asarray(expected),
+                    rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_codebook_h1_matches_plain_ref(backend):
+    """With H=1 the binary-Y rule is a no-op: parity with the plain
+    (non-dedup) kernels/ref oracle."""
+    k, d, b = 16, 16, 9
+    cb = jnp.asarray(RNG.standard_normal((k, d)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, k, (b, 1)), jnp.int32)
+    sketch = idx                              # identity id space
+    spec = EmbeddingSpec(n_rows=b, dim=d, k_rows=k, n_hot=1)
+    out = _engine(spec, backend).codebook_lookup(cb, sketch,
+                                                 jnp.arange(b))
+    assert_allclose(np.asarray(out), np.asarray(ref.codebook_lookup(cb, idx)),
+                    rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bag lookups (incl. empty bags); onehot declares no bag support
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["gather", "pallas"])
+def test_bag_parity(backend):
+    n, d, nnz, nseg = 40, 16, 64, 11
+    table = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    vals = jnp.asarray(RNG.integers(0, n, nnz), jnp.int32)
+    segs = jnp.asarray(np.sort(RNG.integers(0, nseg, nnz)), jnp.int32)
+    spec = EmbeddingSpec(n_rows=n, dim=d)
+    out = _engine(spec, backend).bag_lookup(table, vals, segs, nseg)
+    assert_allclose(np.asarray(out),
+                    np.asarray(ref.embedding_bag(table, vals, segs, nseg)),
+                    rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["gather", "pallas"])
+def test_bag_empty_segments(backend):
+    table = jnp.ones((10, 8), jnp.float32)
+    vals = jnp.asarray([1, 2, 3], jnp.int32)
+    segs = jnp.asarray([0, 0, 4], jnp.int32)   # segments 1-3, 5 empty
+    spec = EmbeddingSpec(n_rows=10, dim=8)
+    out = _engine(spec, backend).bag_lookup(table, vals, segs, 6)
+    assert_allclose(np.asarray(out[1:4]), 0.0)
+    assert_allclose(np.asarray(out[0]), 2.0)
+    assert_allclose(np.asarray(out[4]), 1.0)
+    assert_allclose(np.asarray(out[5]), 0.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_codebook_grad_parity(backend):
+    """Training differentiates through the lookup: every backend's
+    codebook gradient must match the gather reference (the pallas kernel
+    carries a custom scatter-add VJP)."""
+    k, d, n, b = 12, 8, 30, 9
+    cb = jnp.asarray(RNG.standard_normal((k, d)), jnp.float32)
+    sketch = np.asarray(RNG.integers(0, k, (n, 2)), np.int32)
+    sketch[::4, 1] = sketch[::4, 0]
+    sketch = jnp.asarray(sketch)
+    ids = jnp.asarray(RNG.integers(0, n, b), jnp.int32)
+    tgt = jnp.asarray(RNG.standard_normal((b, d)), jnp.float32)
+
+    def loss(cb, backend):
+        spec = EmbeddingSpec(n_rows=n, dim=d, k_rows=k, n_hot=2)
+        out = _engine(spec, backend).codebook_lookup(cb, sketch, ids)
+        return jnp.sum((out - tgt) ** 2)
+
+    g = jax.grad(loss)(cb, backend)
+    g_ref = jax.grad(loss)(cb, "gather")
+    assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_bag_grad_parity():
+    n, d, nnz, nseg = 20, 8, 32, 7
+    table = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    vals = jnp.asarray(RNG.integers(0, n, nnz), jnp.int32)
+    segs = jnp.asarray(np.sort(RNG.integers(0, nseg, nnz)), jnp.int32)
+
+    def loss(t, backend):
+        spec = EmbeddingSpec(n_rows=n, dim=d)
+        return jnp.sum(_engine(spec, backend).bag_lookup(t, vals, segs,
+                                                         nseg) ** 2)
+
+    assert_allclose(np.asarray(jax.grad(loss)(table, "pallas")),
+                    np.asarray(jax.grad(loss)(table, "gather")),
+                    rtol=1e-5, atol=1e-5)
+
+
+def test_bag_auto_tpu_unsorted_falls_back_to_gather():
+    """The fused bag kernel is only correct for sorted segment_ids; the
+    TPU auto-path must not hand it unsorted bags."""
+    n, d = 12, 8
+    table = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    vals = jnp.asarray([1, 2, 3], jnp.int32)
+    segs = jnp.asarray([0, 1, 0], jnp.int32)          # NOT sorted
+    spec = EmbeddingSpec(n_rows=n, dim=d)
+    eng = EmbeddingEngine(spec, platform="tpu")       # auto-select
+    out = eng.bag_lookup(table, vals, segs, 3)        # undeclared: gather
+    assert_allclose(np.asarray(out),
+                    np.asarray(ref.embedding_bag(table, vals, segs, 3)),
+                    rtol=1e-6, atol=1e-6)
+    # sorted + declared -> the engine may keep the fused backend
+    segs_s = jnp.sort(segs)
+    out_s = eng.bag_lookup(table, vals, segs_s, 3, indices_sorted=True)
+    assert_allclose(np.asarray(out_s),
+                    np.asarray(ref.embedding_bag(table, vals, segs_s, 3)),
+                    rtol=1e-6, atol=1e-6)
+
+
+def test_onehot_rejects_bag():
+    spec = EmbeddingSpec(n_rows=10, dim=8)
+    eng = _engine(spec, "onehot")
+    with pytest.raises(ValueError):
+        eng.bag_lookup(jnp.ones((10, 8)), jnp.asarray([0]),
+                       jnp.asarray([0]), 2)
+
+
+# ---------------------------------------------------------------------------
+# auto-selection heuristics
+# ---------------------------------------------------------------------------
+def test_auto_select_platform_rules():
+    big = EmbeddingSpec(n_rows=10_000, dim=64, k_rows=4096, n_hot=2)
+    small = EmbeddingSpec(n_rows=10_000, dim=64, k_rows=256, n_hot=2)
+    assert EmbeddingEngine(big, platform="tpu").resolve("codebook").name \
+        == "pallas"
+    assert EmbeddingEngine(small, platform="tpu").resolve("codebook").name \
+        == "onehot"
+    assert EmbeddingEngine(big, platform="tpu").resolve("bag").name \
+        == "pallas"
+    assert EmbeddingEngine(big, platform="tpu").resolve("full").name \
+        == "gather"
+    for kind in ("full", "codebook", "bag"):
+        assert EmbeddingEngine(big, platform="cpu").resolve(kind).name \
+            == "gather"
+    # explicit override beats the heuristics
+    assert EmbeddingEngine(big, platform="tpu",
+                           backend="gather").resolve("codebook").name \
+        == "gather"
+
+
+def test_unknown_backend_raises():
+    spec = EmbeddingSpec(n_rows=10, dim=8)
+    with pytest.raises(KeyError):
+        EmbeddingEngine(spec, backend="cuda").resolve("full")
+
+
+# ---------------------------------------------------------------------------
+# architecture rule: models/ and launch/ never bypass the engine
+# ---------------------------------------------------------------------------
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+FORBIDDEN = [
+    # direct kernel imports — backends are reached via the registry only
+    re.compile(r"from\s+repro\.kernels|import\s+repro\.kernels|"
+               r"from\s+\.\.?kernels"),
+    # raw table lookups — jnp.take on a table/params/codebook-like operand
+    re.compile(r"jnp\.take\(\s*(params\b|params\[|table\b|codebook\b|"
+               r"cb\b|embed\b|t\b|w\b)"),
+    re.compile(r"one_hot\([^)]*\)\s*@"),      # hand-rolled onehot lookup
+]
+
+
+@pytest.mark.parametrize("layer", ["models", "launch"])
+def test_no_raw_lookups_outside_engine(layer):
+    offenders = []
+    for path in sorted((SRC / layer).glob("*.py")):
+        text = path.read_text()
+        for pat in FORBIDDEN:
+            for m in pat.finditer(text):
+                line = text.count("\n", 0, m.start()) + 1
+                offenders.append(f"{path.name}:{line}: {m.group(0)!r}")
+    assert not offenders, (
+        "raw embedding lookups / kernel imports must route through "
+        "repro.embedding.EmbeddingEngine:\n" + "\n".join(offenders))

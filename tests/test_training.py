@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# property tests below need hypothesis; skip the module (not the suite)
+# when the container doesn't ship it
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.training import optimizer as opt_lib
 from repro.training.compress import compress_decompress

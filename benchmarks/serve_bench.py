@@ -1,0 +1,109 @@
+"""Serving benchmark: p50/p99 per (backend x batch bucket) through the
+repro.serve stack — the record that seeds the serving perf trajectory.
+
+Trains one small compressed model, then for every registered
+EmbeddingEngine backend (plus auto-selection) builds a RecsysSession +
+BatchDispatcher and times requests at each rung of the bucket ladder.
+CPU wall-time is NOT a TPU signal (pallas runs in interpret mode
+off-TPU); re-run on real hardware with the same flag to recalibrate.
+
+``python benchmarks/serve_bench.py --json [--out BENCH_serve.json]``
+emits the machine-readable record:
+
+    {"bench": "serve_session", "platform": ..., "records":
+      [{"backend", "bucket", "p50_ms", "p99_ms", "compiles"}, ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+BUCKETS = (1, 8, 64)
+
+
+def _trained(dataset: str, dim: int, steps: int):
+    from repro.core import baco_build
+    from repro.data import paperlike_dataset
+    from repro.training import Trainer, TrainConfig
+    _, _, _, train, _ = paperlike_dataset(dataset, seed=0)
+    sketch = baco_build(train, d=dim, ratio=0.25)
+    tr = Trainer(train, sketch, TrainConfig(dim=dim, steps=steps,
+                                            batch_size=1024, lr=5e-3))
+    tr.run(log_every=0)
+    return tr
+
+
+def bench(dataset: str = "beauty_s", dim: int = 32, steps: int = 40,
+          n_requests: int = 20, buckets=BUCKETS):
+    """-> list of JSON-able {backend, bucket, p50_ms, p99_ms, compiles}."""
+    from repro.embedding import available_backends
+    from repro.serve import BatchDispatcher, RecsysSession
+    tr = _trained(dataset, dim, steps)
+    rng = np.random.default_rng(0)
+    records = []
+    for name in ("auto",) + tuple(available_backends()):
+        backend = None if name == "auto" else name
+        try:
+            session = RecsysSession(tr.params, tr.statics, tr.mcfg,
+                                    k=20, backend=backend)
+            disp = BatchDispatcher(session, buckets=buckets)
+            disp.warmup()
+        except Exception as exc:  # backend can't serve this config
+            records.append({"backend": name, "error": str(exc)[:200]})
+            continue
+        for bucket in buckets:
+            lat = []
+            for _ in range(n_requests):
+                ids = rng.integers(0, tr.graph.n_users, bucket)
+                t0 = time.perf_counter()
+                disp(ids)
+                lat.append((time.perf_counter() - t0) * 1e3)
+            lat = np.asarray(lat)
+            records.append({
+                "backend": name, "bucket": int(bucket),
+                "n_requests": n_requests,
+                "p50_ms": round(float(np.percentile(lat, 50)), 3),
+                "p99_ms": round(float(np.percentile(lat, 99)), 3),
+                "compiles": disp.compile_count,
+            })
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable perf record")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON record to this path "
+                         "(e.g. BENCH_serve.json)")
+    ap.add_argument("--dataset", default="beauty_s")
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--n-requests", type=int, default=20)
+    args = ap.parse_args(argv)
+    records = bench(dataset=args.dataset, dim=args.dim, steps=args.steps,
+                    n_requests=args.n_requests)
+    record = {"bench": "serve_session",
+              "platform": jax.default_backend(),
+              "buckets": list(BUCKETS),
+              "dataset": args.dataset, "dim": args.dim,
+              "records": records}
+    text = json.dumps(record, indent=2)
+    if args.json:
+        print(text)
+    else:
+        for r in records:
+            print(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,16 +26,23 @@ print(f"params: {sketch.n_params(64):,} vs full "
 u0 = sketch.user_idx[0]
 print(f"user 0 -> codebook rows {u0[0]} (primary) + {u0[1]} (secondary)")
 
-# 4. cluster quality vs random hashing
+# 4. cluster quality vs random hashing: connectivity AND balance
 rand = build_sketch("random", graph, budget=sketch.k_users + sketch.k_items)
 for name, sk in [("baco", sketch), ("random", rand)]:
-    labels = np.concatenate([sk.user_idx[:, 0],
-                             sk.item_idx[:, 0] + sk.k_users])
-    lu = sk.user_idx[:, 0]
-    lv = sk.item_idx[:, 0]
-    intra = np.sum(lu[graph.edge_u] == -1)  # placeholder
-    gini = metrics.gini(metrics.cluster_sizes(labels))
-    print(f"{name:8s} gini(cluster sizes)={gini:.3f}")
+    if sk.meta and "joint_labels" in sk.meta:
+        # co-clustering methods keep the shared user/item label universe
+        joint = np.asarray(sk.meta["joint_labels"])
+    else:
+        # per-side sketches have no cross-side correspondence; pairing
+        # user cluster c with item cluster c is the random-co-clustering
+        # null (expected intra fraction ~ 1/K)
+        joint = np.concatenate([sk.user_idx[:, 0], sk.item_idx[:, 0]])
+    intra = metrics.intra_edges(graph, joint) / graph.n_edges
+    sizes = metrics.cluster_sizes(
+        np.concatenate([sk.user_idx[:, 0], sk.item_idx[:, 0] + sk.k_users]))
+    gini = metrics.gini(sizes)
+    print(f"{name:8s} intra-cluster edge fraction={intra:.3f} "
+          f"gini(cluster sizes)={gini:.3f}")
 
 # 5. embeddings: lookup through the sketch
 import jax, jax.numpy as jnp

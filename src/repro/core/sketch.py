@@ -75,6 +75,34 @@ class Sketch:
         full = (self.n_users + self.n_items) * d
         return self.n_params(d) / max(full, 1)
 
+    # -- serialization (serve/artifact.py bundles) --------------------------
+    def state_arrays(self) -> dict:
+        """The index arrays that define this sketch (deployable state)."""
+        return {"user_idx": self.user_idx, "item_idx": self.item_idx}
+
+    def meta_json(self) -> dict:
+        """JSON-safe provenance: method + every scalar meta entry.
+        Array-valued entries (e.g. the pre-compaction joint labels) stay
+        out of the manifest — they are solver intermediates, not state."""
+        out = {"method": self.method}
+        for k, v in (self.meta or {}).items():
+            if isinstance(v, (bool, int, float, str)) or v is None:
+                out[k] = v
+            elif isinstance(v, np.integer):
+                out[k] = int(v)
+            elif isinstance(v, np.floating):
+                out[k] = float(v)
+        return out
+
+    @staticmethod
+    def from_state(arrays: dict, k_users: int, k_items: int,
+                   method: str = "unknown",
+                   meta: Optional[dict] = None) -> "Sketch":
+        """Rebuild a Sketch from `state_arrays` output (validates ranges)."""
+        return Sketch(np.asarray(arrays["user_idx"], np.int32),
+                      np.asarray(arrays["item_idx"], np.int32),
+                      int(k_users), int(k_items), method=method, meta=meta)
+
     # -- dense views (tests / small graphs) ---------------------------------
     def dense_Y_user(self) -> np.ndarray:
         y = np.zeros((self.n_users, self.k_users), dtype=np.float32)

@@ -1,10 +1,11 @@
 from .engine import (EmbeddingEngine, EmbeddingSpec, LookupBackend,
                      available_backends, embedding_lookup, get_backend,
-                     register_backend)
+                     normalize_backend, register_backend)
 from .tables import (init_embedding, embed_lookup, init_codebook,
                      codebook_lookup, embedding_bag)
 
 __all__ = ["EmbeddingSpec", "EmbeddingEngine", "LookupBackend",
            "available_backends", "embedding_lookup", "get_backend",
-           "register_backend", "init_embedding", "embed_lookup",
-           "init_codebook", "codebook_lookup", "embedding_bag"]
+           "normalize_backend", "register_backend", "init_embedding",
+           "embed_lookup", "init_codebook", "codebook_lookup",
+           "embedding_bag"]

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 __all__ = ["EmbeddingSpec", "EmbeddingEngine", "LookupBackend",
            "register_backend", "get_backend", "available_backends",
-           "dedup_keep_mask", "embedding_lookup",
+           "normalize_backend", "dedup_keep_mask", "embedding_lookup",
            "ONEHOT_MAX_ROWS"]
 
 # Below this codebook size the one-hot matmul fits comfortably in VMEM and
@@ -152,6 +152,16 @@ def get_backend(name: str) -> LookupBackend:
 def available_backends():
     _ensure_registered()
     return tuple(sorted(_REGISTRY))
+
+
+def normalize_backend(name: Optional[str]) -> Optional[str]:
+    """Canonicalize a CLI/config/artifact backend name: "auto"/None mean
+    per-platform auto-selection (None); anything else must name a
+    registered backend (KeyError otherwise, listing what exists)."""
+    if name is None or name == "auto":
+        return None
+    get_backend(name)           # raises KeyError for unknown names
+    return name
 
 
 # ---------------------------------------------------------------------------

@@ -1,122 +1,99 @@
-"""Serving launcher: batched scoring with compressed codebooks.
+"""Serving launcher: thin CLI over the repro.serve API.
 
-Demonstrates the paper's inference story on CPU smoke scale:
-  * builds a BACO sketch over a synthetic graph,
-  * trains briefly, then serves batched top-k requests where every user/
-    item embedding is a codebook row (2-hot for users via SCU),
-  * reports p50/p99 latency over --n-requests batches.
+Paper path (default): obtain a CompressedArtifact — loaded from
+``--artifact DIR`` when one is published there, otherwise trained on the
+spot (and exported to ``--artifact`` if given, so the next run skips the
+cluster+train phase entirely) — then serve batched top-k requests
+through ``RecsysSession`` + ``BatchDispatcher`` and report p50/p99
+latency plus compile-count telemetry.
 
-Every table lookup routes through the EmbeddingEngine; `--backend`
-forces a specific lookup backend ("gather" | "onehot" | "pallas",
-default: per-platform auto-selection) so backend choices can be A/B'd
-from the command line — see benchmarks/kernel_bench.py --json for the
-measured sweep.
+Every table lookup routes through the EmbeddingEngine; ``--backend``
+overrides the lookup backend recorded in the artifact ("gather" |
+"onehot" | "pallas"; "auto" keeps the artifact's choice) — see
+benchmarks/serve_bench.py --json for the measured sweep.
 
-For the assigned archs, `--arch <id> --shape serve_p99|decode_32k` runs
-the smoke-scale serve/decode step (full configs are dry-run only);
-decode shapes donate the KV cache between requests.
+For the assigned archs, ``--arch <id> --shape serve_p99|decode_32k``
+serves the smoke-scale cell through ``ArchSession`` (full configs are
+dry-run only); decode shapes donate the KV cache between requests.
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
-class ServeSession:
-    """Persistent engine-backed serve path for the paper pipeline.
-
-    The scoring fn is jitted ONCE and reused for every request; params
-    and statics are device-resident. Backend choice is baked into the
-    model config, so swapping it recompiles exactly one function. (The
-    int32 request ids cannot alias the float top-k outputs, so nothing
-    is donated here; the donation win lives in the arch decode path,
-    where the KV cache is donated between requests.)
-    """
-
-    def __init__(self, params, statics, mcfg, k: int):
-        from repro.models import lightgcn as L
-        self.params = jax.device_put(params)
-        self.statics = jax.device_put(statics)
-        self.k = k
-
-        def score_topk(params, statics, user_ids):
-            scores = L.score_all_items(params, statics, mcfg, user_ids)
-            return jax.lax.top_k(scores, k)
-
-        self._fn = jax.jit(score_topk)
-
-    def warmup(self, batch: int):
-        ids = jnp.zeros((batch,), jnp.int32)
-        jax.block_until_ready(self._fn(self.params, self.statics, ids))
-
-    def __call__(self, user_ids):
-        return self._fn(self.params, self.statics, user_ids)
-
-
-def paper_serving(args):
+def _get_artifact(args):
+    from repro.serve import CompressedArtifact
+    if args.artifact:
+        try:
+            art = CompressedArtifact.load(args.artifact)
+            print(f"[serve] loaded artifact {args.artifact} "
+                  f"(method={art.provenance.get('method', '?')}, "
+                  f"{art.n_params()} params)")
+            return art
+        except FileNotFoundError:
+            pass
     from repro.core import baco_build
     from repro.data import paperlike_dataset
+    from repro.embedding import normalize_backend
     from repro.training import Trainer, TrainConfig
-
-    backend = None if args.backend == "auto" else args.backend
-    _, _, _, train, test = paperlike_dataset(args.dataset, seed=0)
+    backend = normalize_backend(args.backend)
+    _, _, _, train, _ = paperlike_dataset(args.dataset, seed=0)
     sketch = baco_build(train, d=args.dim, ratio=0.25)
     tr = Trainer(train, sketch, TrainConfig(dim=args.dim, steps=args.steps,
                                             batch_size=2048, lr=5e-3,
                                             lookup_backend=backend))
     tr.run(log_every=0)
+    art = tr.export(args.artifact)
+    if args.artifact:
+        print(f"[serve] exported artifact to {args.artifact}")
+    return art
 
-    session = ServeSession(tr.params, tr.statics, tr.mcfg, args.k)
-    session.warmup(args.batch)
+
+def paper_serving(args):
+    from repro.embedding import normalize_backend
+    from repro.serve import BatchDispatcher, RecsysSession
+    art = _get_artifact(args)
+    # "auto" -> None: keep the backend recorded in the artifact
+    session = RecsysSession.from_artifact(
+        art, k=args.k, backend=normalize_backend(args.backend))
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    disp = BatchDispatcher(session, buckets=buckets)
+    disp.warmup()
 
     rng = np.random.default_rng(0)
-    lat = []
+    n_users = art.model["n_users"]
+    top = disp.buckets[-1]            # dispatcher's sorted ladder
     for _ in range(args.n_requests):
-        users = jnp.asarray(rng.integers(0, train.n_users, args.batch),
-                            jnp.int32)
-        t0 = time.time()
-        vals, idx = session(users)
-        jax.block_until_ready(vals)
-        lat.append((time.time() - t0) * 1e3)
-    lat = np.sort(np.asarray(lat))
-    print(f"[serve] {args.n_requests} requests of batch {args.batch} "
-          f"(backend={args.backend}): "
-          f"p50={lat[len(lat)//2]:.2f}ms "
-          f"p99={lat[int(len(lat)*0.99)]:.2f}ms "
-          f"(codebook {sketch.k_users}+{sketch.k_items} rows, "
-          f"{sketch.compression_ratio(args.dim)*100:.0f}% of full params)")
+        size = (int(rng.integers(1, top + 1))
+                if args.randomize_batches else args.batch)
+        disp(rng.integers(0, n_users, size))
+    st = disp.stats()
+    sk = art.sketch
+    compression = (f"codebook {sk.k_users}+{sk.k_items} rows, "
+                   f"{sk.compression_ratio(art.model['dim'])*100:.0f}% "
+                   f"of full params" if sk is not None else "uncompressed")
+    print(f"[serve] {st['requests']} requests "
+          f"(batch={'rand' if args.randomize_batches else args.batch}, "
+          f"backend={args.backend}): p50={st['p50_ms']:.2f}ms "
+          f"p99={st['p99_ms']:.2f}ms compiles={st['compiles']} "
+          f"buckets={st['bucket_counts']} ({compression})")
     return 0
 
 
 def arch_serving(args):
-    from repro.launch.steps import build_cell
-    backend = None if args.backend == "auto" else args.backend
-    cell = build_cell(args.arch, args.shape, mesh=None, smoke=True,
-                      lookup_backend=backend)
-    donate = cell.donate if cell.kind == "decode" else ()
-    fn = jax.jit(cell.fn, donate_argnums=donate)
-    args_t = cell.args
-    out = fn(*args_t)
-    jax.block_until_ready(out)
-    if donate:  # decode consumed + returned the cache; thread it through
-        args_t = (args_t[0], out[1], args_t[2])
-    lat = []
+    from repro.serve import ArchSession
+    session = ArchSession(args.arch, args.shape, backend=args.backend)
+    session.warmup()
     for _ in range(args.n_requests):
-        t0 = time.time()
-        out = fn(*args_t)
-        jax.block_until_ready(out)
-        lat.append((time.time() - t0) * 1e3)
-        if donate:
-            args_t = (args_t[0], out[1], args_t[2])
-    lat = np.sort(np.asarray(lat))
+        session()
+    st = session.stats()
     print(f"[serve] {args.arch}:{args.shape} smoke (backend={args.backend}"
-          f"{', cache donated' if donate else ''}) "
-          f"p50={lat[len(lat)//2]:.2f}ms p99={lat[int(len(lat)*0.99)]:.2f}ms")
+          f"{', cache donated' if st['cache_donated'] else ''}) "
+          f"p50={st['p50_ms']:.2f}ms p99={st['p99_ms']:.2f}ms "
+          f"compiles={st['compiles']}")
     return 0
 
 
@@ -130,6 +107,14 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--n-requests", type=int, default=50)
+    ap.add_argument("--artifact", default=None,
+                    help="artifact dir: load if published, else train "
+                         "once and export here (compress-once/serve-many)")
+    ap.add_argument("--buckets", default="1,8,64,512",
+                    help="BatchDispatcher bucket ladder (comma-separated)")
+    ap.add_argument("--randomize-batches", action="store_true",
+                    help="draw each request's batch size from [1, top "
+                         "bucket] instead of --batch")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "gather", "onehot", "pallas"],
                     help="EmbeddingEngine lookup backend override")

@@ -41,6 +41,19 @@ class Cell:
     donate: Tuple[int, ...] = ()
     notes: str = ""
 
+    def next_args(self, args: Tuple[Any, ...], out) -> Tuple[Any, ...]:
+        """Thread one request's outputs into the next request's args.
+
+        Decode cells return (logits, cache) and donate the cache buffer
+        (argnum 1): the returned cache replaces the consumed input so
+        steady-state decoding reuses the donated allocation. Other kinds
+        keep their args (serve/retrieval cells are stateless between
+        requests; train threading is the launcher's loop, not a Cell
+        concern)."""
+        if self.kind == "decode" and self.donate:
+            return (args[0], out[1]) + tuple(args[2:])
+        return args
+
 
 # ---------------------------------------------------------------------------
 # spec helpers

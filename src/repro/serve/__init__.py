@@ -1,0 +1,47 @@
+"""repro.serve — first-class serving for compressed embedding models.
+
+The paper compresses embedding tables so the model can be *served*
+cheaply; this package is that deployment surface. Two pillars:
+
+  * ``CompressedArtifact`` — a versioned deployment bundle (sketch index
+    arrays + trained codebooks + model config + provenance) with atomic
+    ``save(dir)`` / ``load(dir)``. Produced by ``Trainer.export()``;
+    compress once, serve many.
+  * ``Session`` — one protocol (``warmup`` / ``__call__`` / ``stats``)
+    with ``RecsysSession`` (top-k over codebooks) and ``ArchSession``
+    (assigned-arch serve/decode cells, KV cache donated and threaded).
+    ``BatchDispatcher`` fronts a session with a padded bucket ladder so
+    arbitrary traffic compiles at most ``len(buckets)`` programs.
+
+Usage — train, export, deploy, serve::
+
+    from repro.core import baco_build
+    from repro.data import paperlike_dataset
+    from repro.training import Trainer, TrainConfig
+    from repro.serve import BatchDispatcher, CompressedArtifact
+
+    _, _, _, train, _ = paperlike_dataset("gowalla_s", seed=0)
+    sketch = baco_build(train, d=64, ratio=0.25)
+    tr = Trainer(train, sketch, TrainConfig(dim=64, steps=300))
+    tr.run(log_every=0)
+    tr.export("artifacts/gowalla_s")          # atomic, versioned
+
+    # ... later, in the serving process (no training deps touched):
+    art = CompressedArtifact.load("artifacts/gowalla_s")
+    session = art.session(k=20)               # RecsysSession
+    disp = BatchDispatcher(session, buckets=(1, 8, 64, 512))
+    disp.warmup()                             # compile the ladder
+    values, items = disp(user_ids)            # any batch size
+    print(disp.stats())                       # p50/p99 ms + compile count
+
+CLI: ``python -m repro.launch.serve [--artifact DIR] [--backend ...]``.
+Bench: ``python benchmarks/serve_bench.py --json``.
+"""
+from .artifact import ARTIFACT_VERSION, CompressedArtifact
+from .dispatch import DEFAULT_BUCKETS, BatchDispatcher
+from .session import ArchSession, RecsysSession, Session
+from .telemetry import LatencyRecorder
+
+__all__ = ["ARTIFACT_VERSION", "CompressedArtifact", "DEFAULT_BUCKETS",
+           "BatchDispatcher", "Session", "RecsysSession", "ArchSession",
+           "LatencyRecorder"]

@@ -1,0 +1,140 @@
+"""CompressedArtifact: the deployable compression bundle.
+
+The paper's output is not a trained process but a *thing you ship*: the
+frozen sketch index arrays, the trained codebooks, and enough model
+config to rebuild the scoring function. `CompressedArtifact` packages
+exactly that, with `save(dir)`/`load(dir)` built on the atomic-manifest
+bundle machinery in `repro.training.checkpoint` — a crash mid-save never
+corrupts a published artifact, and `load` fails loudly on missing or
+corrupt manifests. Compress once, serve many.
+
+Layout of `save(dir)`:
+
+    <dir>/manifest.json   version, model config, provenance (JSON)
+    <dir>/arrays.npz      params/*, edges/*, sketch/* (flattened paths)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.sketch import Sketch
+from repro.training.checkpoint import read_bundle, write_bundle
+
+__all__ = ["CompressedArtifact", "ARTIFACT_VERSION"]
+
+ARTIFACT_VERSION = 1
+
+# the model-config keys an artifact must carry to rebuild a LightGCNConfig
+_MODEL_KEYS = ("n_users", "n_items", "dim", "n_layers", "l2",
+               "k_users", "k_items", "n_hot_users", "lookup_backend")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedArtifact:
+    """Everything serving needs, as host numpy state.
+
+    params:     {"user_table","item_table"} trained codebooks (or full
+                tables when the model was trained uncompressed)
+    edges:      {"edge_u","edge_v","edge_norm"} — LightGCN propagation
+                runs over the training graph at serve time, so the
+                normalized edge list is part of the deployable state
+    sketch:     frozen index arrays (None for uncompressed models)
+    model:      LightGCNConfig fields (dim, layers, codebook sizes,
+                lookup_backend, ...)
+    provenance: JSON scalars recording how the sketch was built (gamma,
+                solver, weight scheme, budget, method) + trainer info
+    """
+
+    params: Any
+    edges: dict
+    sketch: Optional[Sketch]
+    model: dict
+    provenance: dict
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_trainer(cls, trainer) -> "CompressedArtifact":
+        """Snapshot a Trainer into a deployable artifact (host numpy)."""
+        params = jax.tree.map(np.asarray, trainer.params)
+        edges = {k: np.asarray(trainer.statics[k])
+                 for k in ("edge_u", "edge_v", "edge_norm")}
+        cfg = trainer.mcfg
+        model = {k: getattr(cfg, k) for k in _MODEL_KEYS}
+        sketch = trainer.sketch
+        provenance = sketch.meta_json() if sketch is not None else {}
+        provenance.update({"lookup_backend": cfg.lookup_backend,
+                           "train_steps": int(trainer.step),
+                           "exported_by": "Trainer.export"})
+        return cls(params=params, edges=edges, sketch=sketch, model=model,
+                   provenance=provenance)
+
+    # -- serving glue -------------------------------------------------------
+    @property
+    def compressed(self) -> bool:
+        return self.sketch is not None
+
+    def mcfg(self):
+        """Rebuild the LightGCN model config this artifact was trained
+        under (lookup_backend included, so backend choice deploys)."""
+        from repro.models.lightgcn import LightGCNConfig
+        return LightGCNConfig(**self.model)
+
+    def statics(self) -> dict:
+        """Device-ready statics for the scoring fn (edges + sketch)."""
+        statics = dict(self.edges)
+        if self.sketch is not None:
+            statics["sketch_u"] = self.sketch.user_idx
+            statics["sketch_v"] = self.sketch.item_idx
+        return statics
+
+    def session(self, k: int = 20, backend: Optional[str] = None):
+        """Convenience: a warmed-up-able RecsysSession over this bundle."""
+        from repro.serve.session import RecsysSession
+        return RecsysSession.from_artifact(self, k=k, backend=backend)
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(p.shape)) for p in
+                   jax.tree.leaves(self.params))
+
+    # -- persistence --------------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Atomically publish the bundle at `directory`."""
+        import os
+        directory = os.path.normpath(directory)
+        parent, name = os.path.split(directory)
+        tree = {"params": self.params, "edges": self.edges}
+        if self.sketch is not None:
+            tree["sketch"] = self.sketch.state_arrays()
+        manifest = {"artifact_version": ARTIFACT_VERSION,
+                    "model": self.model, "provenance": self.provenance}
+        return write_bundle(parent or ".", name, tree, manifest)
+
+    @classmethod
+    def load(cls, directory: str) -> "CompressedArtifact":
+        """Load a published bundle; clear errors for non-artifacts."""
+        tree, manifest = read_bundle(directory)
+        version = manifest.get("artifact_version")
+        if version is None:
+            raise ValueError(
+                f"{directory!r} is a bundle but not a CompressedArtifact "
+                f"(no artifact_version in manifest)")
+        if version != ARTIFACT_VERSION:
+            raise ValueError(
+                f"unsupported artifact version {version} at {directory!r} "
+                f"(this build reads version {ARTIFACT_VERSION})")
+        model = manifest["model"]
+        provenance = manifest.get("provenance", {})
+        sketch = None
+        if "sketch" in tree:
+            sketch = Sketch.from_state(
+                tree["sketch"], k_users=model["k_users"],
+                k_items=model["k_items"],
+                method=provenance.get("method", "unknown"),
+                meta=provenance)
+        return cls(params=tree["params"], edges=tree["edges"],
+                   sketch=sketch, model=dict(model),
+                   provenance=dict(provenance))

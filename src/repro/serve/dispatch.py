@@ -1,0 +1,105 @@
+"""BatchDispatcher: fixed bucket ladder over variable-size traffic.
+
+Serving traffic arrives at arbitrary batch sizes; jitting the scoring fn
+per size would compile one XLA program per distinct size. The dispatcher
+pads every request up to the smallest bucket that fits — so a stream of
+any sizes compiles at most ``len(buckets)`` programs (asserted via the
+compile-count telemetry in tests/test_serve.py).
+
+Padding rule: requests are padded with id 0 — a valid row, and scoring
+is row-independent, so padded rows cannot perturb real rows. Outputs are
+sliced back to the true request size before they leave the dispatcher,
+so padded rows never escape (mask correctness by construction).
+
+Requests larger than the top bucket are chunked: full top-bucket chunks
+plus one bucketed remainder, concatenated in order.
+
+Padding and slicing happen HOST-SIDE (numpy) and the dispatcher returns
+host arrays: per-size device pad/slice ops would each compile their own
+tiny XLA program — the very per-size compile explosion the ladder
+exists to prevent — and serving results leave the device anyway.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.serve.telemetry import LatencyRecorder
+
+__all__ = ["BatchDispatcher", "DEFAULT_BUCKETS"]
+
+DEFAULT_BUCKETS = (1, 8, 64, 512)
+
+
+class BatchDispatcher:
+    """Fronts a Session with a padded bucket ladder.
+
+    session:  anything with the Session protocol whose __call__ takes a
+              rank-1 int32 id array and returns arrays with a leading
+              batch dim (RecsysSession).
+    buckets:  ascending batch sizes to compile for (deduplicated).
+    """
+
+    def __init__(self, session, buckets: Sequence[int] = DEFAULT_BUCKETS):
+        self.session = session
+        self.buckets = tuple(sorted({int(b) for b in buckets}))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError(f"buckets must be positive, got {buckets!r}")
+        self._lat = LatencyRecorder()
+        self._bucket_counts = {b: 0 for b in self.buckets}
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket that fits n (n must be <= the top bucket)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"batch {n} exceeds top bucket {self.buckets[-1]}")
+
+    def warmup(self) -> None:
+        """Pre-compile every rung of the ladder (untimed)."""
+        for b in self.buckets:
+            self.session.warmup(b)
+
+    def __call__(self, user_ids):
+        """Serve one request of any size >= 1; returns host arrays sliced
+        to the true size (chunked through the top bucket when oversized)."""
+        user_ids = np.asarray(user_ids, np.int32)
+        n = int(user_ids.shape[0])
+        if n < 1:
+            raise ValueError("empty request")
+        t0 = time.perf_counter()
+        outs = []
+        top = self.buckets[-1]
+        start = 0
+        while start < n:
+            m = min(n - start, top)
+            bucket = self.bucket_for(m)
+            chunk = user_ids[start:start + m]
+            if m < bucket:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((bucket - m,), np.int32)])
+            out = self.session(chunk)
+            outs.append(jax.tree.map(
+                lambda x, m=m: np.asarray(x)[:m], out))
+            self._bucket_counts[bucket] += 1
+            start += m
+        self._lat.record((time.perf_counter() - t0) * 1e3)
+        if len(outs) == 1:
+            return outs[0]
+        return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *outs)
+
+    @property
+    def compile_count(self) -> int:
+        return self.session.compile_count
+
+    def stats(self) -> dict:
+        """Dispatcher latency (whole requests, chunking included) plus
+        bucket usage and the underlying session's telemetry."""
+        return {"buckets": list(self.buckets),
+                "bucket_counts": dict(self._bucket_counts),
+                "compiles": self.compile_count,
+                **self._lat.summary(),
+                "session": self.session.stats()}

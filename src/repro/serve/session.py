@@ -1,0 +1,173 @@
+"""Session: the one serving front door.
+
+A Session owns device-resident state and exactly one jitted request fn;
+the protocol is three methods:
+
+    warmup(batch)   compile + touch the path for one request shape
+    __call__(...)   serve one request (blocks, records latency)
+    stats()         telemetry dict: requests, p50/p99 ms, compile count
+
+Two implementations cover the repo's serving surfaces:
+
+  * RecsysSession — the paper pipeline: batched user ids -> top-k items
+    scored over compressed codebooks. Built either from live Trainer
+    state or from a CompressedArtifact (the deploy path).
+  * ArchSession — the assigned-arch smoke cells (serve/retrieval/decode
+    shapes from launch/steps.build_cell); decode cells donate the KV
+    cache and the session threads it between requests.
+
+Front a Session with `repro.serve.BatchDispatcher` to serve arbitrary
+batch sizes with a bounded number of compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.embedding import normalize_backend
+from repro.serve.telemetry import LatencyRecorder, compile_count
+
+__all__ = ["Session", "RecsysSession", "ArchSession"]
+
+
+class Session:
+    """Protocol base: subclasses implement the three methods below."""
+
+    def warmup(self, batch: Optional[int] = None) -> None:
+        raise NotImplementedError
+
+    def __call__(self, *args, **kwargs):
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        raise NotImplementedError
+
+    @property
+    def compile_count(self) -> int:
+        raise NotImplementedError
+
+
+class RecsysSession(Session):
+    """Top-k scoring over (possibly compressed) LightGCN tables.
+
+    The scoring fn is jitted ONCE; params and statics are device-resident
+    for the session's lifetime. Each distinct request batch size is a new
+    XLA program — callers with variable traffic should go through
+    BatchDispatcher, which pads to a fixed bucket ladder. (The int32
+    request ids cannot alias the float top-k outputs, so nothing is
+    donated here; the donation win lives in ArchSession's decode path.)
+    """
+
+    def __init__(self, params, statics, mcfg, k: int = 20,
+                 backend: Optional[str] = None):
+        from repro.models import lightgcn as L
+        if backend is not None:
+            mcfg = dataclasses.replace(
+                mcfg, lookup_backend=normalize_backend(backend))
+        else:
+            normalize_backend(mcfg.lookup_backend)   # validate early
+        self.mcfg = mcfg
+        self.k = int(k)
+        self.params = jax.device_put(
+            jax.tree.map(jnp.asarray, params))
+        self.statics = jax.device_put(
+            jax.tree.map(jnp.asarray, statics))
+
+        def score_topk(params, statics, user_ids):
+            scores = L.score_all_items(params, statics, mcfg, user_ids)
+            return jax.lax.top_k(scores, self.k)
+
+        self._fn = jax.jit(score_topk)
+        self._lat = LatencyRecorder()
+        self._shapes = set()
+
+    @classmethod
+    def from_artifact(cls, artifact, k: int = 20,
+                      backend: Optional[str] = None) -> "RecsysSession":
+        """The deploy path: rebuild the scoring session from a loaded
+        CompressedArtifact. `backend` overrides the backend recorded in
+        the artifact meta (None keeps the trained choice)."""
+        return cls(artifact.params, artifact.statics(), artifact.mcfg(),
+                   k=k, backend=backend)
+
+    def warmup(self, batch: Optional[int] = None) -> None:
+        batch = int(batch or 1)
+        self._shapes.add(batch)
+        ids = jnp.zeros((batch,), jnp.int32)
+        jax.block_until_ready(self._fn(self.params, self.statics, ids))
+
+    def __call__(self, user_ids):
+        """user_ids int32 [B] -> (values [B,k], item_ids [B,k])."""
+        user_ids = jnp.asarray(user_ids, jnp.int32)
+        self._shapes.add(int(user_ids.shape[0]))
+        t0 = time.perf_counter()
+        out = self._fn(self.params, self.statics, user_ids)
+        jax.block_until_ready(out)
+        self._lat.record((time.perf_counter() - t0) * 1e3)
+        return out
+
+    @property
+    def compile_count(self) -> int:
+        return compile_count(self._fn, self._shapes)
+
+    def stats(self) -> dict:
+        return {"kind": "recsys", "k": self.k,
+                "backend": self.mcfg.lookup_backend or "auto",
+                "compiles": self.compile_count, **self._lat.summary()}
+
+
+class ArchSession(Session):
+    """Serve/retrieval/decode cells for the assigned archs (smoke scale by
+    default; full configs are dry-run only).
+
+    Decode cells donate the KV cache: the session threads the returned
+    cache back into the next request's arguments (`Cell.next_args`), so
+    steady-state decoding reuses the donated buffers.
+    """
+
+    def __init__(self, arch_id: str, shape: str = "serve_p99",
+                 backend: Optional[str] = None, mesh=None,
+                 smoke: bool = True):
+        from repro.launch.steps import build_cell
+        self.cell = build_cell(arch_id, shape, mesh=mesh, smoke=smoke,
+                               lookup_backend=normalize_backend(backend))
+        donate = self.cell.donate if self.cell.kind == "decode" else ()
+        self._fn = jax.jit(self.cell.fn, donate_argnums=donate)
+        self._args = self.cell.args
+        self._lat = LatencyRecorder()
+        self._warm = False
+
+    @property
+    def donates_cache(self) -> bool:
+        return self.cell.kind == "decode" and bool(self.cell.donate)
+
+    def warmup(self, batch: Optional[int] = None) -> None:
+        """Compile + run once (untimed); threads the donated cache."""
+        out = self._fn(*self._args)
+        jax.block_until_ready(out)
+        self._args = self.cell.next_args(self._args, out)
+        self._warm = True
+
+    def __call__(self):
+        if not self._warm:
+            self.warmup()
+        t0 = time.perf_counter()
+        out = self._fn(*self._args)
+        jax.block_until_ready(out)
+        self._lat.record((time.perf_counter() - t0) * 1e3)
+        self._args = self.cell.next_args(self._args, out)
+        return out
+
+    @property
+    def compile_count(self) -> int:
+        return compile_count(self._fn, {0} if self._warm else set())
+
+    def stats(self) -> dict:
+        return {"kind": self.cell.kind, "arch": self.cell.arch_id,
+                "shape": self.cell.shape_name,
+                "cache_donated": self.donates_cache,
+                "compiles": self.compile_count, **self._lat.summary()}

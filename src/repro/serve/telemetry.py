@@ -1,0 +1,52 @@
+"""Serving telemetry: latency percentiles and compile counting.
+
+Every Session and the BatchDispatcher carry a LatencyRecorder; `stats()`
+surfaces p50/p99 per-request wall time plus the number of distinct XLA
+programs compiled so far — the quantity the bucket ladder exists to
+bound (arbitrary traffic must compile at most `len(buckets)` programs).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+__all__ = ["LatencyRecorder", "compile_count"]
+
+
+class LatencyRecorder:
+    """Accumulates per-request latencies (milliseconds)."""
+
+    def __init__(self):
+        self._ms: List[float] = []
+
+    def record(self, ms: float) -> None:
+        self._ms.append(float(ms))
+
+    @property
+    def count(self) -> int:
+        return len(self._ms)
+
+    def percentile(self, q: float) -> float:
+        if not self._ms:
+            return float("nan")
+        return float(np.percentile(np.asarray(self._ms), q))
+
+    def summary(self) -> dict:
+        return {"requests": self.count,
+                "p50_ms": round(self.percentile(50), 3),
+                "p99_ms": round(self.percentile(99), 3)}
+
+
+def compile_count(jitted, seen_shapes) -> int:
+    """Distinct compiled programs for one jitted fn. Reads jax's own
+    executable cache when the private hook exists; otherwise falls back
+    to the set of distinct request shapes the session has dispatched
+    (equal under the bucket-padding invariant)."""
+    cache_size = getattr(jitted, "_cache_size", None)
+    if cache_size is not None:
+        try:
+            return int(cache_size())
+        except Exception:  # pragma: no cover - jax internals moved
+            pass
+    return len(seen_shapes)

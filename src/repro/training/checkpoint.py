@@ -22,7 +22,7 @@ import jax
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+           "CheckpointManager", "write_bundle", "read_bundle"]
 
 _MANIFEST = "manifest.json"
 
@@ -37,25 +37,98 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree: Any,
-                    extra: Optional[dict] = None) -> str:
-    """Atomically write {arrays, manifest} for `step`. Returns final path."""
-    os.makedirs(directory, exist_ok=True)
-    tmp = os.path.join(directory, f"tmp.{step}")
-    final = os.path.join(directory, f"step_{step:010d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+def _unflatten_paths(arrays: dict) -> dict:
+    """Rebuild nested dicts from 'a/b/c' flattened key paths (the inverse
+    of _flatten_with_paths for dict-of-dict trees)."""
+    tree: dict = {}
+    for key, arr in arrays.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+def write_bundle(parent: str, name: str, tree: Any, manifest: dict) -> str:
+    """Atomically publish `<parent>/<name>` = {arrays.npz, manifest.json}.
+
+    Writes to `<parent>/tmp.<name>` then `os.replace` (atomic on POSIX) —
+    a crash mid-write never leaves a half-written bundle at the published
+    path. Overwriting moves the previous bundle aside WHOLE (rename, not
+    in-place delete) before publishing, so it is never observed
+    half-deleted; it is garbage-collected only after the new bundle is
+    live. Both checkpoints and serving artifacts are bundles; `manifest`
+    carries the caller's metadata (must be JSON-serializable)."""
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent, f"tmp.{name}")
+    old = os.path.join(parent, f"tmp.{name}.old")
+    final = os.path.join(parent, name)
+    for stale in (tmp, old):
+        if os.path.exists(stale):
+            shutil.rmtree(stale)
     os.makedirs(tmp)
     arrays, _ = _flatten_with_paths(tree)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    manifest = {"step": int(step), "n_arrays": len(arrays),
-                "extra": extra or {}}
+    manifest = dict(manifest)
+    manifest["n_arrays"] = len(arrays)
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
-        shutil.rmtree(final)
+        os.replace(final, old)                  # old bundle aside, whole
     os.replace(tmp, final)                      # atomic publish
+    shutil.rmtree(old, ignore_errors=True)
     return final
+
+
+def read_bundle(path: str, like: Any = None) -> Tuple[Any, dict]:
+    """Load a bundle written by `write_bundle`; returns (tree, manifest).
+
+    With `like`, arrays are restored into its structure with shape checks
+    (checkpoint resume). Without it, nested dicts are rebuilt from the
+    flattened key paths — used by artifact loading, where the reader has
+    no template. Raises FileNotFoundError for a missing/incomplete bundle
+    and ValueError for a corrupt manifest. A republish-in-progress has a
+    brief window where the published path is mid-swap (between the two
+    renames in write_bundle); the reader retries briefly before raising,
+    so concurrent load-during-republish does not spuriously fail."""
+    import time
+    manifest_path = os.path.join(path, _MANIFEST)
+    for _ in range(3):
+        if os.path.isfile(manifest_path):
+            break
+        time.sleep(0.025)
+    else:
+        raise FileNotFoundError(
+            f"no bundle manifest at {manifest_path!r} (missing or "
+            f"incomplete write)")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"corrupt bundle manifest {manifest_path!r}: {e}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    if like is None:
+        return _unflatten_paths({k: data[k] for k in data.files}), manifest
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat_like:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        if key not in data:
+            raise KeyError(f"bundle missing array {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Atomically write {arrays, manifest} for `step`. Returns final path."""
+    return write_bundle(directory, f"step_{step:010d}", tree,
+                        {"step": int(step), "extra": extra or {}})
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -76,22 +149,7 @@ def restore_checkpoint(directory: str, step: int, like: Any,
     """Restore into the structure of `like`; optionally re-place onto new
     shardings (elastic restart onto a different mesh)."""
     path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, _MANIFEST)) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    arrays, _ = _flatten_with_paths(like)
-    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
-    for p, leaf in flat_like:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
-                       for q in p)
-        if key not in data:
-            raise KeyError(f"checkpoint missing array {key!r}")
-        arr = data[key]
-        if tuple(arr.shape) != tuple(np.shape(leaf)):
-            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
-        leaves.append(arr)
-    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    tree, manifest = read_bundle(path, like=like)
     if shardings is not None:
         tree = jax.device_put(tree, shardings)
     return tree, manifest["extra"]

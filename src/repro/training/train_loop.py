@@ -46,6 +46,7 @@ class Trainer:
     def __init__(self, graph: BipartiteGraph, sketch: Optional[Sketch],
                  cfg: TrainConfig):
         self.graph = graph
+        self.sketch = sketch
         self.cfg = cfg
         self.mcfg = L.from_sketch(graph, sketch, dim=cfg.dim,
                                   n_layers=cfg.n_layers, l2=cfg.l2,
@@ -134,3 +135,15 @@ class Trainer:
     def n_params(self) -> int:
         return sum(int(np.prod(p.shape)) for p in
                    jax.tree.leaves(self.params))
+
+    # -- deployment -----------------------------------------------------------
+    def export(self, directory: Optional[str] = None):
+        """Snapshot this run into a deployable CompressedArtifact (sketch
+        indices + codebooks + config + provenance); saves atomically when
+        `directory` is given. The compress-once/serve-many handoff:
+        serving loads the artifact instead of re-clustering/retraining."""
+        from repro.serve import CompressedArtifact
+        artifact = CompressedArtifact.from_trainer(self)
+        if directory is not None:
+            artifact.save(directory)
+        return artifact

@@ -228,7 +228,7 @@ FORBIDDEN = [
 ]
 
 
-@pytest.mark.parametrize("layer", ["models", "launch"])
+@pytest.mark.parametrize("layer", ["models", "launch", "serve"])
 def test_no_raw_lookups_outside_engine(layer):
     offenders = []
     for path in sorted((SRC / layer).glob("*.py")):
@@ -240,3 +240,34 @@ def test_no_raw_lookups_outside_engine(layer):
     assert not offenders, (
         "raw embedding lookups / kernel imports must route through "
         "repro.embedding.EmbeddingEngine:\n" + "\n".join(offenders))
+
+
+# ---------------------------------------------------------------------------
+# architecture rule: serving goes through repro.serve.Session only
+# ---------------------------------------------------------------------------
+REPO = SRC.parents[1]
+# a hand-rolled jitted serving fn: `@jax.jit def serve/score/decode...`
+# or jitting a serve-ish callable / a launch Cell directly
+SERVE_JIT = re.compile(
+    r"@jax\.jit\s*\n\s*def\s+(serve|score|decode|topk)\w*"
+    r"|jax\.jit\(\s*(serve|score|cell\.fn)")
+
+
+def test_no_jit_serving_loops_outside_serve():
+    """repro.serve.Session is the only serving front door: launch/serve.py
+    is a thin CLI (no jax.jit at all) and examples never hand-roll a
+    jitted serve loop."""
+    offenders = []
+    cli = SRC / "launch" / "serve.py"
+    for line_no, line in enumerate(cli.read_text().splitlines(), 1):
+        if "jax.jit" in line:
+            offenders.append(f"{cli.name}:{line_no}: {line.strip()!r}")
+    for path in sorted((REPO / "examples").glob("*.py")):
+        text = path.read_text()
+        for m in SERVE_JIT.finditer(text):
+            line = text.count("\n", 0, m.start()) + 1
+            offenders.append(f"{path.name}:{line}: {m.group(0)!r}")
+    assert not offenders, (
+        "serving must go through repro.serve.Session (RecsysSession/"
+        "ArchSession + BatchDispatcher), not hand-rolled jax.jit loops:\n"
+        + "\n".join(offenders))

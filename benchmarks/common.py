@@ -7,7 +7,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import BASELINES, baco_build, build_sketch
+from repro.core import BASELINES, ClusterEngine, build_sketch
 from repro.core import metrics as M
 from repro.data import paperlike_dataset
 from repro.training import Trainer, TrainConfig
@@ -27,9 +27,9 @@ def sketch_for(method: str, graph, ratio: float = 0.25, d: int = 64,
     if method == "full":
         return None
     if method == "baco":
-        return baco_build(graph, d=d, ratio=ratio)
+        return ClusterEngine().build(graph, d=d, ratio=ratio)
     if method == "baco_no_scu":
-        return baco_build(graph, d=d, ratio=ratio, scu=False)
+        return ClusterEngine().build(graph, d=d, ratio=ratio, scu=False)
     return build_sketch(method, graph, budget=int(ratio * graph.n_nodes),
                         seed=seed)
 

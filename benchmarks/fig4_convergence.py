@@ -5,12 +5,12 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, get_dataset
-from repro.core import make_weights
-from repro.core.solver_jax import lp_solve
+from repro.core import ClusterEngine, make_weights
 
 
 def run(fast: bool = True):
     rows = Row()
+    engine = ClusterEngine(solver="jax")
     for ds in (["gowalla_s"] if fast else ["beauty_s", "gowalla_s",
                                            "yelp2018_s", "amazon_s"]):
         _, _, _, train, _ = get_dataset(ds)
@@ -20,7 +20,7 @@ def run(fast: bool = True):
         labels = None
         for t in range(1, 9):
             t0 = time.time()
-            labels, _ = lp_solve(train, wu, wv, gamma, max_iters=t)
+            labels, _ = engine.solve(train, wu, wv, gamma, max_iters=t)
             dt = time.time() - t0
             k = np.unique(labels).size
             rows.add(f"fig4/{ds}/iter{t}", dt * 1e6,

@@ -27,11 +27,11 @@ BUCKETS = (1, 8, 64)
 
 
 def _trained(dataset: str, dim: int, steps: int):
-    from repro.core import baco_build
+    from repro.core import ClusterEngine
     from repro.data import paperlike_dataset
     from repro.training import Trainer, TrainConfig
     _, _, _, train, _ = paperlike_dataset(dataset, seed=0)
-    sketch = baco_build(train, d=dim, ratio=0.25)
+    sketch = ClusterEngine().build(train, d=dim, ratio=0.25)
     tr = Trainer(train, sketch, TrainConfig(dim=dim, steps=steps,
                                             batch_size=1024, lr=5e-3))
     tr.run(log_every=0)

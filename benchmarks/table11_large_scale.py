@@ -10,7 +10,7 @@ import time
 import numpy as np
 
 from benchmarks.common import Row, cluster_metrics, get_dataset, sketch_for
-from repro.core import baco_build, build_sketch
+from repro.core import ClusterEngine, build_sketch
 
 
 def run(fast: bool = True):
@@ -28,8 +28,8 @@ def run(fast: bool = True):
     budget = int(0.125 * train.n_nodes)
     for m in ["baco", "louvain_modularity", "lp"]:
         t0 = time.time()
-        sk = (baco_build(train, d=64, ratio=0.125) if m == "baco"
-              else build_sketch(m, train, budget=budget))
+        sk = (ClusterEngine().build(train, d=64, ratio=0.125)
+              if m == "baco" else build_sketch(m, train, budget=budget))
         dt = time.time() - t0
         cm = cluster_metrics(train, sk)
         rows.add(f"table11/{name}/{m}", dt * 1e6,

@@ -4,13 +4,13 @@ solver (BACO) and Louvain."""
 from __future__ import annotations
 
 from benchmarks.common import Row, get_dataset, train_eval
-from repro.core import Sketch, compact_labels, fit_gamma, make_weights
+from repro.core import ClusterEngine, Sketch, compact_labels, make_weights
 from repro.core.baselines import _louvain_family
 
 
 def _lp_sketch(train, scheme, budget):
     wu, wv = make_weights(train, scheme)
-    gamma, labels, _ = fit_gamma(train, wu, wv, budget)
+    gamma, labels, _ = ClusterEngine().fit_gamma(train, wu, wv, budget)
     ku, ul = compact_labels(labels[:train.n_users])
     kv, il = compact_labels(labels[train.n_users:])
     import numpy as np

@@ -6,9 +6,10 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, get_dataset, train_eval
-from repro.core import (Sketch, baco_build, compact_labels, fit_gamma,
-                        make_weights, secondary_user_labels)
+from repro.core import ClusterEngine, Sketch, compact_labels, make_weights
 from repro.core.graph import BipartiteGraph
+
+ENGINE = ClusterEngine()
 
 
 def _transposed(graph):
@@ -23,7 +24,7 @@ def _secondary_item_labels(graph, labels, wu, wv, gamma):
     """SCI: runner-up clusters for ITEMS via the transposed graph."""
     gt = _transposed(graph)
     lt = np.concatenate([labels[graph.n_users:], labels[:graph.n_users]])
-    return secondary_user_labels(gt, lt, wv, wu, gamma)
+    return ENGINE.secondary_user_labels(gt, lt, wv, wu, gamma)
 
 
 def _variant(train, scu: bool, sci: bool, d=64, ratio=0.25):
@@ -34,10 +35,10 @@ def _variant(train, scu: bool, sci: bool, d=64, ratio=0.25):
         eff = max(2, int((budget * d - train.n_users) // d))
     if sci:
         eff = max(2, int((eff * d - train.n_items) // d))
-    gamma, labels, _ = fit_gamma(train, wu, wv, eff)
+    gamma, labels, _ = ENGINE.fit_gamma(train, wu, wv, eff)
     pu, pv = labels[:train.n_users], labels[train.n_users:]
     if scu:
-        su = secondary_user_labels(train, labels, wu, wv, gamma)
+        su = ENGINE.secondary_user_labels(train, labels, wu, wv, gamma)
         ku, pu_c, su_c = compact_labels(pu, su)
         user_idx = np.stack([pu_c, su_c], axis=1)
     else:

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BipartiteGraph, baco_build, build_sketch
+from repro.core import BipartiteGraph, ClusterEngine, build_sketch
 from repro.embedding import codebook_lookup
 
 
@@ -78,7 +78,7 @@ def main():
     print(f"corpus graph: {docs} docs x {vocab} tokens, "
           f"{graph.n_edges} distinct (doc, token) pairs")
     budget = int(0.25 * graph.n_nodes)
-    baco = baco_build(graph, d=32, budget=budget, scu=False)
+    baco = ClusterEngine().build(graph, d=32, budget=budget, scu=False)
     rand = build_sketch("random", graph, budget=budget)
     print(f"token codebook: {baco.k_items} rows (full: {vocab})")
 

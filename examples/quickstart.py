@@ -4,7 +4,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import baco_build, build_sketch, make_weights
+from repro.core import ClusterEngine, build_sketch, make_weights
 from repro.core import metrics
 from repro.data import planted_coclusters
 
@@ -14,8 +14,10 @@ graph, true_uc, true_ic = planted_coclusters(
 print(f"graph: {graph.n_users} users x {graph.n_items} items, "
       f"{graph.n_edges} interactions")
 
-# 2. BACO: balanced co-clustering -> sketch (frozen compression artifact)
-sketch = baco_build(graph, d=64, ratio=0.25)   # budget = 25% of full rows
+# 2. BACO: balanced co-clustering -> sketch (frozen compression artifact).
+#    ClusterEngine dispatches to the registered solver (device-resident
+#    jax loop here; "jax_sharded" on a multi-device mesh).
+sketch = ClusterEngine().build(graph, d=64, ratio=0.25)  # budget = 25%
 print(f"BACO: {sketch.k_users} user + {sketch.k_items} item codebook rows "
       f"(gamma={sketch.meta['gamma']:.3f}, {sketch.meta['iters']} LP iters)")
 print(f"params: {sketch.n_params(64):,} vs full "

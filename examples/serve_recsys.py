@@ -13,7 +13,7 @@ import tempfile
 
 import numpy as np
 
-from repro.core import baco_build
+from repro.core import ClusterEngine
 from repro.data import paperlike_dataset
 from repro.training import Trainer, TrainConfig
 from repro.serve import BatchDispatcher, CompressedArtifact, RecsysSession
@@ -29,7 +29,7 @@ def main(argv=None):
 
     # --- compress once ----------------------------------------------------
     _, _, _, train, test = paperlike_dataset(args.dataset, seed=0)
-    sketch = baco_build(train, d=args.dim, ratio=0.25)
+    sketch = ClusterEngine().build(train, d=args.dim, ratio=0.25)
     tr = Trainer(train, sketch, TrainConfig(dim=args.dim, steps=args.steps,
                                             batch_size=2048, lr=5e-3))
     tr.run(log_every=0)

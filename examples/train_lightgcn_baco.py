@@ -7,7 +7,7 @@ Run:  PYTHONPATH=src python examples/train_lightgcn_baco.py [--steps 600]
 import argparse
 import tempfile
 
-from repro.core import baco_build, build_sketch
+from repro.core import ClusterEngine, build_sketch
 from repro.data import paperlike_dataset
 from repro.training import Trainer, TrainConfig
 
@@ -29,7 +29,8 @@ def main():
         if method == "full":
             sketch = None
         elif method == "baco":
-            sketch = baco_build(train, d=args.dim, ratio=args.ratio)
+            sketch = ClusterEngine().build(train, d=args.dim,
+                                           ratio=args.ratio)
         else:
             sketch = build_sketch("random", train,
                                   budget=int(args.ratio * train.n_nodes))

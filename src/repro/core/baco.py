@@ -1,19 +1,23 @@
-"""BACO top level: budget handling, gamma auto-tuning, SCU, sketch build.
+"""BACO top level — thin wrappers over the ClusterEngine.
 
-The paper fixes gamma per dataset (Table 7) so that the surviving label
-count meets the codebook budget B within T iterations (Fig. 4 shows the
-ratio converging in ~5 iters). We expose both modes:
+The budget handling, gamma auto-tuning, SCU and sketch assembly that
+used to live here moved into ``repro.core.engine.ClusterEngine`` (the
+solver-registry dispatch layer); these functions keep the historical
+API for core-internal callers and tests. New call sites should
+construct a ClusterEngine directly — launch/, benchmarks/ and examples/
+already do, and the arch test forbids them from importing solver
+modules.
 
   * gamma given     -> run the solver, report whatever K comes out;
   * gamma=None      -> log-grid search keeping the partition with the
                        best bipartite modularity among those fitting the
-                       budget (see fit_gamma docstring for why a budget
-                       bisection is unsafe).
+                       budget (see ClusterEngine.fit_gamma for why a
+                       budget bisection is unsafe).
 
 SCU (Alg. 2): with secondary user sketches the budget is tightened to
 B' = (B*d - |U|)/d, then ONE extra user half-step over the converged
-labels yields the secondary assignment; primary+secondary user labels are
-compacted jointly so both index one user codebook.
+labels yields the secondary assignment; primary+secondary user labels
+are compacted jointly so both index one user codebook.
 """
 from __future__ import annotations
 
@@ -21,201 +25,38 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from .engine import ClusterEngine
 from .graph import BipartiteGraph
-from .sketch import Sketch, compact_labels
-from .weights import make_weights
-from . import solver_jax, solver_numpy
+from .sketch import Sketch
 
 __all__ = ["baco_build", "fit_gamma", "secondary_user_labels"]
-
-
-def _solve(graph, wu, wv, gamma, budget, max_iters, solver,
-           init_labels=None):
-    if solver == "jax":
-        return solver_jax.lp_solve(graph, wu, wv, gamma, budget, max_iters,
-                                   init_labels=init_labels)
-    if solver == "numpy":
-        return solver_numpy.lp_solve_sequential(graph, wu, wv, gamma, budget,
-                                                max_iters,
-                                                init_labels=init_labels)
-    raise ValueError(f"unknown solver {solver!r}")
-
-
-def _side_counts(graph, labels):
-    ku = np.unique(labels[:graph.n_users]).size
-    kv = np.unique(labels[graph.n_users:]).size
-    return ku, kv
 
 
 def fit_gamma(graph: BipartiteGraph, wu, wv, budget: int, *,
               max_iters: int = 8, solver: str = "jax",
               grid: int = 10, gamma0: float = 1.0,
-              warm_start: bool = True,
+              warm_start: bool = True, batched: bool = False,
               ) -> Tuple[float, np.ndarray, int]:
-    """Pick gamma on a log-grid: best bipartite modularity s.t. K <= budget.
-
-    K(gamma) is NOT monotone for the side-synchronous solver (measured on
-    synthetic Gowalla: K dips between gamma=4 and 16 while quality rises),
-    so a budget bisection can lock onto a poor plateau. Bipartite
-    modularity of the resulting partition tracks downstream Recall@20
-    almost perfectly (see EXPERIMENTS.md §Paper-validation/gamma-proxy),
-    and evaluating it costs one pass over the edges — so we grid-search
-    gamma and keep the most-modular partition that fits the budget.
-    Matches the paper's protocol of tuning gamma per dataset (Table 7)
-    without a validation training run.
-
-    warm_start: the grid is walked from the LARGEST gamma down, each
-    solve seeded with the previous (finer) partition instead of
-    singletons. Label propagation can only merge/relabel into existing
-    neighbor labels — it never mints new ones — so warm starts are safe
-    exactly in the fine->coarse direction: lowering gamma only asks for
-    more merging. Adjacent gammas share most of their structure, so LP
-    converges in fewer sweeps and never re-discovers the same coarse
-    clusters from scratch. The x2-refinement probes are seeded from the
-    nearest finer grid partition for the same reason
-    (tests/test_warm_start.py asserts identical-or-better modularity at
-    equal budget on the synthetic dataset).
-    """
-    from .metrics import bipartite_modularity
-    gammas = [float(gamma0) * (4.0 ** i) for i in range(-3, grid - 3)]
-    best = None          # (modularity, gamma, labels, iters)
-    fallback = None      # (K, gamma, labels, iters) closest above budget
-    prev = None          # previous (finer) grid partition, warm-start seed
-    grid_labels = {}     # gamma -> labels, for seeding the refinement
-    for g in sorted(gammas, reverse=True):
-        labels, it = _solve(graph, wu, wv, g, budget, max_iters, solver,
-                            init_labels=prev if warm_start else None)
-        if warm_start:
-            prev = labels
-        grid_labels[g] = labels
-        ku, kv = _side_counts(graph, labels)
-        k = ku + kv
-        if k <= budget:
-            q = bipartite_modularity(graph, labels)
-            if best is None or q > best[0]:
-                best = (q, g, labels, it)
-        elif fallback is None or k < fallback[0]:
-            fallback = (k, g, labels, it)
-    if best is None:
-        _, g, labels, it = fallback
-        return g, labels, it
-    # refinement: the grid is x4-spaced; probe the x2 neighbours
-    for g in (best[1] * 2.0, best[1] / 2.0):
-        seed = None
-        if warm_start:
-            finer = [gg for gg in grid_labels if gg > g]
-            seed = grid_labels[min(finer)] if finer else None
-        labels, it = _solve(graph, wu, wv, g, budget, max_iters, solver,
-                            init_labels=seed)
-        ku, kv = _side_counts(graph, labels)
-        if ku + kv <= budget:
-            q = bipartite_modularity(graph, labels)
-            if q > best[0]:
-                best = (q, g, labels, it)
-    return best[1], best[2], best[3]
+    """ClusterEngine.fit_gamma with the historical signature."""
+    return ClusterEngine(solver=solver).fit_gamma(
+        graph, wu, wv, budget, max_iters=max_iters, grid=grid,
+        gamma0=gamma0, warm_start=warm_start, batched=batched)
 
 
 def secondary_user_labels(graph: BipartiteGraph, labels: np.ndarray,
                           wu, wv, gamma: float, solver: str = "jax",
                           ) -> np.ndarray:
-    """Secondary user clusters (Alg. 2 line 18).
-
-    The paper reruns the user sweep once; at a converged fixed point that
-    reproduces the primary labels exactly, which would make SCU a no-op.
-    Matching the stated motivation ("users share taste similarities with
-    various user groups") we take the RUNNER-UP label: the best-scoring
-    candidate cluster other than the primary one (falling back to the
-    primary for users with a single candidate). Recorded in DESIGN.md.
-    """
-    if solver == "numpy":
-        lab = labels.astype(np.int64).copy()
-        nu = graph.n_users
-        u_indptr, u_nbrs = graph.user_csr()
-        n = graph.n_nodes
-        w_v_by_label = np.bincount(lab[nu:], weights=wv, minlength=n)
-        out = lab[:nu].copy()
-        for i in range(nu):
-            nbrs = u_nbrs[u_indptr[i]:u_indptr[i + 1]]
-            if nbrs.size == 0:
-                continue
-            cand, cnt = np.unique(lab[nu + nbrs], return_counts=True)
-            own = lab[i]
-            keep = cand != own
-            if not keep.any():
-                continue
-            scores = (cnt - gamma * wu[i] * w_v_by_label[cand])[keep]
-            out[i] = cand[keep][int(np.argmax(scores))]
-        return out.astype(np.int32)
-    import jax
-    import jax.numpy as jnp
-    nu, n = graph.n_users, graph.n_nodes
-    lab = jnp.asarray(labels, jnp.int32)
-    own = lab[:nu]
-    item_labels = lab[nu:]
-    wv_by_label = jax.ops.segment_sum(jnp.asarray(wv, jnp.float32),
-                                      item_labels, num_segments=n)
-    eu = jnp.asarray(graph.edge_u)
-    cand_lab = item_labels[jnp.asarray(graph.edge_v)]
-    # group (user, label) pairs as in the solver, then argmax w/o primary
-    o1 = jnp.argsort(cand_lab, stable=True)
-    o2 = jnp.argsort(eu[o1], stable=True)
-    order = o1[o2]
-    node_s, lab_s = eu[order], cand_lab[order]
-    e = node_s.shape[0]
-    new_grp = jnp.concatenate([
-        jnp.ones((1,), jnp.bool_),
-        (node_s[1:] != node_s[:-1]) | (lab_s[1:] != lab_s[:-1])])
-    gid = jnp.cumsum(new_grp.astype(jnp.int32)) - 1
-    cnt = jax.ops.segment_sum(jnp.ones((e,), jnp.float32), gid,
-                              num_segments=e, indices_are_sorted=True)[gid]
-    wu_j = jnp.asarray(wu, jnp.float32)
-    score = cnt - jnp.float32(gamma) * wu_j[node_s] * wv_by_label[lab_s]
-    score = jnp.where(lab_s == own[node_s], -3e38, score)   # exclude primary
-    best = jax.ops.segment_max(score, node_s, num_segments=nu,
-                               indices_are_sorted=True)
-    best = jnp.where(jnp.isfinite(best), best, -3e38)
-    is_best = (score >= best[node_s]) & (score > -3e38)
-    cand = jnp.where(is_best, lab_s, jnp.int32(n))
-    best_lab = jax.ops.segment_min(cand, node_s, num_segments=nu,
-                                   indices_are_sorted=True)
-    has = best_lab < n
-    return np.asarray(jnp.where(has, best_lab, own).astype(jnp.int32))
+    """ClusterEngine.secondary_user_labels with the historical signature."""
+    return ClusterEngine(solver=solver).secondary_user_labels(
+        graph, labels, wu, wv, gamma)
 
 
 def baco_build(graph: BipartiteGraph, *, d: int = 64,
                budget: Optional[int] = None, ratio: float = 0.25,
                gamma: Optional[float] = None, scheme: str = "hws",
                solver: str = "jax", max_iters: int = 8, scu: bool = True,
-               ) -> Sketch:
-    """Build the BACO sketch (the paper's complete pipeline).
-
-    budget: total codebook rows K_u + K_v. Defaults to ratio*(|U|+|V|).
-    """
-    if budget is None:
-        budget = max(2, int(round(ratio * graph.n_nodes)))
-    eff_budget = budget
-    if scu:  # Alg. 2: B' = (B*d - |U|) / d
-        eff_budget = max(2, int((budget * d - graph.n_users) // d))
-    wu, wv = make_weights(graph, scheme)
-    if gamma is None:
-        gamma, labels, iters = fit_gamma(graph, wu, wv, eff_budget,
-                                         max_iters=max_iters, solver=solver)
-    else:
-        labels, iters = _solve(graph, wu, wv, gamma, eff_budget, max_iters,
-                               solver)
-    pu = labels[:graph.n_users]
-    pv = labels[graph.n_users:]
-    meta = {"gamma": float(gamma), "iters": int(iters), "scheme": scheme,
-            "solver": solver, "budget": int(budget),
-            "eff_budget": int(eff_budget), "scu": bool(scu),
-            "joint_labels": np.asarray(labels, dtype=np.int32)}
-    if scu:
-        su = secondary_user_labels(graph, labels, wu, wv, gamma, solver)
-        ku, pu_c, su_c = compact_labels(pu, su)
-        kv, pv_c = compact_labels(pv)
-        return Sketch(np.stack([pu_c, su_c], axis=1), pv_c[:, None],
-                      ku, kv, method="baco", meta=meta)
-    ku, pu_c = compact_labels(pu)
-    kv, pv_c = compact_labels(pv)
-    return Sketch(pu_c[:, None], pv_c[:, None], ku, kv,
-                  method="baco(w/o scu)", meta=meta)
+               batched_gamma: bool = False) -> Sketch:
+    """ClusterEngine.build with the historical signature."""
+    return ClusterEngine(solver=solver).build(
+        graph, d=d, budget=budget, ratio=ratio, gamma=gamma, scheme=scheme,
+        max_iters=max_iters, scu=scu, batched_gamma=batched_gamma)

@@ -4,14 +4,55 @@ Stored as an edge list with both CSR orderings precomputed so the
 side-synchronous LP solver can run gather/segment passes without
 re-sorting. Host-side state is numpy; solvers move what they need to
 device.
+
+Derived views (degrees, CSR index pointers) are memoized on the graph:
+the numpy solver and the SCU pass hit ``user_csr()``/``item_csr()`` in
+hot loops and the arrays are immutable, so they are computed once.
+Million-edge graphs are built with ``from_edge_blocks`` (or
+``from_edges(chunk_size=...)``), which dedups/sorts fixed-size edge
+blocks and merges the sorted key runs instead of materializing the full
+int64 key array plus its sorted copy at once.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Optional, Tuple
 
 import numpy as np
 
 __all__ = ["BipartiteGraph"]
+
+
+def _block_keys(n_users: int, n_items: int, edge_u, edge_v) -> np.ndarray:
+    """Validated, deduped, sorted int64 keys u*n_items+v for one block."""
+    eu = np.asarray(edge_u, dtype=np.int64)
+    ev = np.asarray(edge_v, dtype=np.int64)
+    if eu.shape != ev.shape or eu.ndim != 1:
+        raise ValueError("edge_u/edge_v must be 1-D and equal length")
+    if eu.size and (eu.min() < 0 or eu.max() >= n_users):
+        raise ValueError("user index out of range")
+    if ev.size and (ev.min() < 0 or ev.max() >= n_items):
+        raise ValueError("item index out of range")
+    return np.unique(eu * n_items + ev)
+
+
+def _merge_unique(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Merge two SORTED UNIQUE int64 runs into one (no full re-sort:
+    O(|a| + |b| log |a|) via searchsorted insertion positions)."""
+    if a.size == 0:
+        return b
+    if b.size == 0:
+        return a
+    ins = np.searchsorted(a, b)
+    fresh = (ins == a.size) | (a[np.minimum(ins, a.size - 1)] != b)
+    b = b[fresh]
+    out = np.empty(a.size + b.size, dtype=a.dtype)
+    pos = ins[fresh] + np.arange(b.size)
+    mask = np.zeros(out.size, dtype=bool)
+    mask[pos] = True
+    out[mask] = b
+    out[~mask] = a
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,10 +73,26 @@ class BipartiteGraph:
     edge_u: np.ndarray
     edge_v: np.ndarray
     perm_by_item: np.ndarray
+    # memo for derived views; arrays are immutable so entries never stale
+    _cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                     compare=False)
 
     @staticmethod
     def from_edges(n_users: int, n_items: int, edge_u, edge_v,
-                   dedup: bool = True) -> "BipartiteGraph":
+                   dedup: bool = True,
+                   chunk_size: Optional[int] = None) -> "BipartiteGraph":
+        if chunk_size is not None:
+            # no up-front int64 conversion of the full arrays — the
+            # whole point of the chunked path is one block at a time
+            if not dedup:
+                raise ValueError("chunked build implies dedup")
+            eu = np.asarray(edge_u)
+            ev = np.asarray(edge_v)
+            if eu.shape != ev.shape or eu.ndim != 1:
+                raise ValueError("edge_u/edge_v must be 1-D and equal length")
+            blocks = ((eu[i:i + chunk_size], ev[i:i + chunk_size])
+                      for i in range(0, max(eu.size, 1), chunk_size))
+            return BipartiteGraph.from_edge_blocks(n_users, n_items, blocks)
         edge_u = np.asarray(edge_u, dtype=np.int64)
         edge_v = np.asarray(edge_v, dtype=np.int64)
         if edge_u.shape != edge_v.shape or edge_u.ndim != 1:
@@ -49,10 +106,37 @@ class BipartiteGraph:
             key = np.unique(key)
         else:
             key = np.sort(key)
+        return BipartiteGraph._from_sorted_keys(n_users, n_items, key)
+
+    @staticmethod
+    def from_edge_blocks(n_users: int, n_items: int,
+                         blocks: Iterable[Tuple[np.ndarray, np.ndarray]],
+                         ) -> "BipartiteGraph":
+        """Streaming builder: ``blocks`` yields (edge_u, edge_v) chunks.
+
+        Each block is validated/deduped/sorted on its own, then merged
+        into the accumulated sorted unique-key run with a searchsorted
+        run-merge (no full re-sort per block) — peak memory is two
+        copies of the DEDUPED key run plus one block; the raw int64 key
+        array and its full sorted copy never coexist.
+        """
+        acc = np.empty(0, dtype=np.int64)
+        for bu, bv in blocks:
+            acc = _merge_unique(acc, _block_keys(n_users, n_items, bu, bv))
+        return BipartiteGraph._from_sorted_keys(n_users, n_items, acc)
+
+    @staticmethod
+    def _from_sorted_keys(n_users: int, n_items: int,
+                          key: np.ndarray) -> "BipartiteGraph":
         eu = (key // n_items).astype(np.int32)
         ev = (key % n_items).astype(np.int32)
         perm = np.argsort(ev, kind="stable").astype(np.int32)
         return BipartiteGraph(int(n_users), int(n_items), eu, ev, perm)
+
+    def _memo(self, name: str, fn):
+        if name not in self._cache:
+            self._cache[name] = fn()
+        return self._cache[name]
 
     # -- basic stats -------------------------------------------------------
     @property
@@ -64,28 +148,32 @@ class BipartiteGraph:
         return self.n_users + self.n_items
 
     def user_degrees(self) -> np.ndarray:
-        return np.bincount(self.edge_u, minlength=self.n_users).astype(np.int64)
+        return self._memo("user_deg", lambda: np.bincount(
+            self.edge_u, minlength=self.n_users).astype(np.int64))
 
     def item_degrees(self) -> np.ndarray:
-        return np.bincount(self.edge_v, minlength=self.n_items).astype(np.int64)
+        return self._memo("item_deg", lambda: np.bincount(
+            self.edge_v, minlength=self.n_items).astype(np.int64))
 
     def density(self) -> float:
         return self.n_edges / float(max(1, self.n_users) * max(1, self.n_items))
 
     # -- adjacency views ---------------------------------------------------
     def user_csr(self):
-        """(indptr, item_indices) neighbor lists per user."""
-        deg = self.user_degrees()
-        indptr = np.zeros(self.n_users + 1, dtype=np.int64)
-        np.cumsum(deg, out=indptr[1:])
-        return indptr, self.edge_v
+        """(indptr, item_indices) neighbor lists per user. Memoized."""
+        def build():
+            indptr = np.zeros(self.n_users + 1, dtype=np.int64)
+            np.cumsum(self.user_degrees(), out=indptr[1:])
+            return indptr, self.edge_v
+        return self._memo("user_csr", build)
 
     def item_csr(self):
-        """(indptr, user_indices) neighbor lists per item."""
-        deg = self.item_degrees()
-        indptr = np.zeros(self.n_items + 1, dtype=np.int64)
-        np.cumsum(deg, out=indptr[1:])
-        return indptr, self.edge_u[self.perm_by_item]
+        """(indptr, user_indices) neighbor lists per item. Memoized."""
+        def build():
+            indptr = np.zeros(self.n_items + 1, dtype=np.int64)
+            np.cumsum(self.item_degrees(), out=indptr[1:])
+            return indptr, self.edge_u[self.perm_by_item]
+        return self._memo("item_csr", build)
 
     def biadjacency(self) -> np.ndarray:
         """Dense {0,1} bi-adjacency B (tests / tiny graphs only)."""

@@ -1,5 +1,7 @@
 from .sharding import (shard, logical_to_spec, current_mesh, named_sharding,
-                       batch_axes)
+                       batch_axes, cluster_mesh, edge_partition,
+                       edge_partitioned_half_step, pad_to_shards)
 
 __all__ = ["shard", "logical_to_spec", "current_mesh", "named_sharding",
-           "batch_axes"]
+           "batch_axes", "cluster_mesh", "edge_partition",
+           "edge_partitioned_half_step", "pad_to_shards"]

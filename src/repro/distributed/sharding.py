@@ -23,11 +23,13 @@ import contextlib
 from typing import Optional, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["shard", "shard_map", "logical_to_spec", "current_mesh",
            "named_sharding", "batch_axes", "logical_mapping",
-           "current_mapping"]
+           "current_mapping", "cluster_mesh", "edge_partition",
+           "pad_to_shards", "edge_partitioned_half_step"]
 
 
 def shard_map(body, *, mesh, in_specs, out_specs):
@@ -155,3 +157,90 @@ def shard(x, *axes: Optional[str]):
 
 def named_sharding(mesh: Mesh, *axes: Optional[str]) -> NamedSharding:
     return NamedSharding(mesh, logical_to_spec(mesh, axes))
+
+
+# ---------------------------------------------------------------------------
+# edge-partitioned co-clustering (ClusterEngine "jax_sharded" solver)
+#
+# The LP half-step updates one side of the bipartite graph from its
+# incident edges. Edges arrive sorted by the updating-side node, so a
+# contiguous partition of that side's node range induces a contiguous
+# edge partition: each device owns a node range plus exactly the edges
+# into it, computes the per-(node, candidate-label) counts with LOCAL
+# segment sums, and only the per-label opposite-side weight totals —
+# a single f32[n_labels] vector — cross devices, via one psum.
+# ---------------------------------------------------------------------------
+def cluster_mesh(n_devices: Optional[int] = None, axis: str = "edge") -> Mesh:
+    """1-D mesh over the local devices for edge-partitioned clustering."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), (axis,))
+
+
+def edge_partition(node_of_edge: np.ndarray, opp_of_edge: np.ndarray,
+                   n_side: int, n_shards: int):
+    """Split edges (sorted by updating-side node) into per-shard blocks.
+
+    Nodes are partitioned into ``n_shards`` contiguous ranges of
+    ``nodes_per_shard``; each shard's edge block is the contiguous run of
+    edges into its range, padded to the max block length with sentinel
+    edges (local node id == nodes_per_shard, dropped by the segment ops).
+
+    Returns (node_local int32[S*Emax], opp int32[S*Emax],
+    nodes_per_shard) — flat, ready for a P("edge") in_spec.
+    """
+    nps = max(1, -(-n_side // n_shards))
+    bounds = np.searchsorted(node_of_edge,
+                             np.arange(n_shards + 1, dtype=np.int64) * nps)
+    emax = max(1, int(np.max(np.diff(bounds))))
+    node_local = np.full((n_shards, emax), nps, dtype=np.int32)
+    opp = np.zeros((n_shards, emax), dtype=np.int32)
+    for s in range(n_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        node_local[s, :hi - lo] = node_of_edge[lo:hi] - s * nps
+        opp[s, :hi - lo] = opp_of_edge[lo:hi]
+    return node_local.reshape(-1), opp.reshape(-1), nps
+
+
+def pad_to_shards(x: np.ndarray, n_shards: int, per_shard: int,
+                  fill=0) -> np.ndarray:
+    """Pad a per-node host array to n_shards*per_shard for P(axis) input."""
+    out = np.full(n_shards * per_shard, fill, dtype=x.dtype)
+    out[:x.shape[0]] = x
+    return out
+
+
+def edge_partitioned_half_step(mesh: Mesh, half_step_fn, n_labels: int,
+                               nodes_per_shard: int, axis: str = "edge"):
+    """shard_map-wrap one LP half-step over an edge-partitioned mesh axis.
+
+    half_step_fn(node_of_edge, cand_lab_of_edge, w_self,
+                 w_other_by_label, own_labels, gamma, n_side, n_labels)
+    is the single-device half-step math (core/solver_jax supplies it);
+    this wrapper only adds the distribution strategy: per-device edge
+    blocks + node ranges, local segment sums, and a psum that combines
+    the per-label opposite-side weight totals.
+
+    The returned callable takes GLOBAL (flat-padded) arrays:
+      node_local [S*Emax], opp_idx [S*Emax]  — from edge_partition
+      own_labels [S*nps], w_self [S*nps]     — updating side, padded
+      lab_other  [S*nps_o], w_other [S*nps_o]— opposite side, padded
+      lab_other_full [n_other]               — replicated, for the
+                                               candidate-label gather
+      gamma scalar                           — replicated
+    and returns new labels [S*nps] (slice [:n_side] for the real nodes).
+    """
+    def body(node_local, opp_idx, own_labels, w_self, lab_other, w_other,
+             lab_other_full, gamma):
+        partial = jax.ops.segment_sum(w_other, lab_other,
+                                      num_segments=n_labels)
+        w_by_label = jax.lax.psum(partial, axis)
+        cand_lab = lab_other_full[opp_idx]
+        return half_step_fn(node_local, cand_lab, w_self, w_by_label,
+                            own_labels, gamma, nodes_per_shard, n_labels)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis), P(axis), P(axis), P(axis),
+                               P(axis), P(axis), P(), P()),
+                     out_specs=P(axis))

@@ -35,13 +35,14 @@ def _get_artifact(args):
             return art
         except FileNotFoundError:
             pass
-    from repro.core import baco_build
+    from repro.core import ClusterEngine, normalize_solver
     from repro.data import paperlike_dataset
     from repro.embedding import normalize_backend
     from repro.training import Trainer, TrainConfig
     backend = normalize_backend(args.backend)
     _, _, _, train, _ = paperlike_dataset(args.dataset, seed=0)
-    sketch = baco_build(train, d=args.dim, ratio=0.25)
+    engine = ClusterEngine(solver=normalize_solver(args.cluster_solver))
+    sketch = engine.build(train, d=args.dim, ratio=0.25)
     tr = Trainer(train, sketch, TrainConfig(dim=args.dim, steps=args.steps,
                                             batch_size=2048, lr=5e-3,
                                             lookup_backend=backend))
@@ -118,6 +119,9 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "gather", "onehot", "pallas"],
                     help="EmbeddingEngine lookup backend override")
+    ap.add_argument("--cluster-solver", default="auto",
+                    help="ClusterEngine solver for on-the-spot "
+                         "compression: auto | jax | jax_sharded | numpy")
     args = ap.parse_args(argv)
     if args.arch:
         return arch_serving(args)

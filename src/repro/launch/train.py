@@ -25,7 +25,7 @@ import numpy as np
 
 
 def paper_pipeline(args):
-    from repro.core import baco_build, build_sketch
+    from repro.core import ClusterEngine, build_sketch, normalize_solver
     from repro.data import paperlike_dataset
     from repro.training import Trainer, TrainConfig
 
@@ -35,7 +35,9 @@ def paper_pipeline(args):
     if args.method == "full":
         sketch = None
     elif args.method == "baco":
-        sketch = baco_build(train, d=args.dim, ratio=args.ratio)
+        engine = ClusterEngine(solver=normalize_solver(args.cluster_solver))
+        sketch = engine.build(train, d=args.dim, ratio=args.ratio,
+                              batched_gamma=args.batched_gamma)
     else:
         sketch = build_sketch(args.method, train,
                               budget=int(args.ratio * train.n_nodes))
@@ -103,6 +105,14 @@ def main(argv=None):
     ap.add_argument("--step-timeout", type=float, default=0)
     ap.add_argument("--compress-grads", default="none",
                     choices=["none", "bf16", "int8"])
+    ap.add_argument("--cluster-solver", default="auto",
+                    help="ClusterEngine solver: auto | jax | jax_sharded "
+                         "| numpy (auto picks jax_sharded on multi-device "
+                         "hosts)")
+    ap.add_argument("--batched-gamma", action="store_true",
+                    help="vmap-batched gamma grid search (concurrent "
+                         "lanes; identical selection to the sequential "
+                         "walk)")
     args = ap.parse_args(argv)
     if args.arch:
         if args.arch.startswith(("gemma", "qwen", "kimi", "dbrx")):

@@ -15,13 +15,13 @@ cheaply; this package is that deployment surface. Two pillars:
 
 Usage — train, export, deploy, serve::
 
-    from repro.core import baco_build
+    from repro.core import ClusterEngine
     from repro.data import paperlike_dataset
     from repro.training import Trainer, TrainConfig
     from repro.serve import BatchDispatcher, CompressedArtifact
 
     _, _, _, train, _ = paperlike_dataset("gowalla_s", seed=0)
-    sketch = baco_build(train, d=64, ratio=0.25)
+    sketch = ClusterEngine().build(train, d=64, ratio=0.25)
     tr = Trainer(train, sketch, TrainConfig(dim=64, steps=300))
     tr.run(log_every=0)
     tr.export("artifacts/gowalla_s")          # atomic, versioned

@@ -1,0 +1,349 @@
+"""ClusterEngine: solver registry dispatch, device-resident while_loop
+vs the frozen seed host loop (bit-for-bit), vmap-batched gamma grid
+parity, edge-partitioned sharded solver parity (mesh of 1 in-process,
+mesh of N via the CPU host-platform device trick in a subprocess), the
+one-device-pass partition scorer, graph CSR memoization + chunked
+builder, and the grep-based architecture rule that no module outside
+core/ imports a solver directly."""
+import pathlib
+import re
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (BipartiteGraph, ClusterEngine, available_solvers,
+                        get_solver, make_weights, normalize_solver)
+from repro.core import engine as cluster_engine_mod
+from repro.core import solver_jax, solver_sharded
+from repro.core.metrics import bipartite_modularity
+from repro.data import planted_coclusters
+
+
+def small_graph(seed=0, nu=300, nv=240, k=12):
+    g, _, _ = planted_coclusters(nu, nv, k_true=k, avg_deg=10, seed=seed)
+    return g
+
+
+def _setup(seed=0):
+    g = small_graph(seed)
+    wu, wv = make_weights(g, "hws")
+    return g, wu, wv, int(0.25 * g.n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# registry + dispatch
+# ---------------------------------------------------------------------------
+def test_registry_contents():
+    assert {"jax", "jax_hostloop", "jax_sharded", "numpy"} <= \
+        set(available_solvers())
+
+
+def test_unknown_solver_raises():
+    with pytest.raises(KeyError):
+        get_solver("cuda")
+    with pytest.raises(KeyError):
+        ClusterEngine(solver="cuda").resolve()
+
+
+def test_normalize_solver():
+    assert normalize_solver(None) is None
+    assert normalize_solver("auto") is None
+    assert normalize_solver("jax") == "jax"
+    with pytest.raises(KeyError):
+        normalize_solver("nope")
+
+
+def test_auto_select():
+    import jax
+    auto = ClusterEngine().resolve().name
+    if jax.device_count() > 1:
+        assert auto == "jax_sharded"
+    else:
+        assert auto == "jax"
+    # a mesh steers auto-selection to the sharded solver
+    from repro.distributed.sharding import cluster_mesh
+    assert ClusterEngine(mesh=cluster_mesh(1)).resolve().name \
+        == "jax_sharded"
+    # explicit override wins
+    assert ClusterEngine(solver="numpy").resolve().name == "numpy"
+
+
+# ---------------------------------------------------------------------------
+# device-resident while_loop == frozen seed host loop, bit-for-bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("gamma", [0.0, 1.0, 16.0])
+@pytest.mark.parametrize("budget", [None, 135])
+def test_while_loop_matches_seed_hostloop(gamma, budget):
+    g, wu, wv, _ = _setup()
+    a, ia = solver_jax.lp_solve(g, wu, wv, gamma, budget, 8)
+    b, ib = solver_jax.lp_solve_hostloop(g, wu, wv, gamma, budget, 8)
+    assert np.array_equal(a, b)
+    assert ia == ib
+
+
+def test_while_loop_matches_hostloop_warm_start():
+    g, wu, wv, budget = _setup(seed=2)
+    seed_labels, _ = solver_jax.lp_solve(g, wu, wv, 16.0, None, 4)
+    a, ia = solver_jax.lp_solve(g, wu, wv, 1.0, budget, 8,
+                                init_labels=seed_labels)
+    b, ib = solver_jax.lp_solve_hostloop(g, wu, wv, 1.0, budget, 8,
+                                         init_labels=seed_labels)
+    assert np.array_equal(a, b)
+    assert ia == ib
+
+
+def test_grid_lanes_match_single_solves():
+    """Every lane of the vmapped while_loop is bit-for-bit the
+    corresponding single solve (masked extra sweeps are identity)."""
+    g, wu, wv, budget = _setup()
+    gammas = [0.25, 1.0, 4.0, 16.0]
+    labs, iters = solver_jax.lp_solve_grid(g, wu, wv, gammas, budget, 8)
+    for i, gm in enumerate(gammas):
+        ref, it = solver_jax.lp_solve(g, wu, wv, gm, budget, 8)
+        assert np.array_equal(labs[i], ref)
+        assert int(iters[i]) == it
+
+
+# ---------------------------------------------------------------------------
+# batched gamma grid == sequential walk (the fit_gamma parity satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("warm", [False, True])
+def test_batched_fit_gamma_matches_sequential_walk(warm):
+    g, wu, wv, budget = _setup()
+    eng = ClusterEngine(solver="jax")
+    gs, ls, its = eng.fit_gamma(g, wu, wv, budget, warm_start=warm,
+                                batched=False)
+    gb, lb, itb = eng.fit_gamma(g, wu, wv, budget, warm_start=warm,
+                                batched=True)
+    assert gs == gb
+    assert np.array_equal(ls, lb)      # same partition bit-for-bit
+    assert its == itb
+    q_seq = bipartite_modularity(g, ls)
+    q_bat = bipartite_modularity(g, lb)
+    assert q_seq == pytest.approx(q_bat)
+
+
+def test_batched_fit_gamma_lane_width_invariant():
+    """Block width must not change the selection (Jacobi rounds converge
+    to the chain regardless of how the grid is chunked)."""
+    g, wu, wv, budget = _setup(seed=1)
+    eng = ClusterEngine(solver="jax")
+    ref = eng.fit_gamma(g, wu, wv, budget, batched=True, lanes=4)
+    for lanes in (1, 3, 10):
+        got = eng.fit_gamma(g, wu, wv, budget, batched=True, lanes=lanes)
+        assert got[0] == ref[0]
+        assert np.array_equal(got[1], ref[1])
+
+
+def test_batched_without_batched_grid_warns_and_falls_back():
+    g, wu, wv, budget = _setup()
+    eng = ClusterEngine(solver="jax_hostloop")    # no batched_grid
+    with pytest.warns(UserWarning, match="no batched grid mode"):
+        gb, lb, _ = eng.fit_gamma(g, wu, wv, budget, batched=True, grid=4)
+    gs, ls, _ = eng.fit_gamma(g, wu, wv, budget, batched=False, grid=4)
+    assert gb == gs and np.array_equal(lb, ls)
+
+
+def test_fit_gamma_solve_counts():
+    """grid=10 -> 10 grid solves + 2 refinement probes, sequentially;
+    batched cold -> ceil(10/lanes) solve_many calls + 2 probe solves."""
+    calls = {"solve": 0, "many": 0}
+
+    class Spy(cluster_engine_mod.ClusterSolver):
+        name = "spy"
+        batched_grid = True
+
+        def solve(self, *a, **kw):
+            calls["solve"] += 1
+            return get_solver("jax").solve(*a, **kw)
+
+        def solve_many(self, *a, **kw):
+            calls["many"] += 1
+            return get_solver("jax").solve_many(*a, **kw)
+
+    cluster_engine_mod.register_solver(Spy())
+    try:
+        g, wu, wv, budget = _setup()
+        eng = ClusterEngine(solver="spy")
+        eng.fit_gamma(g, wu, wv, budget, warm_start=False)
+        assert calls == {"solve": 12, "many": 0}
+        calls.update(solve=0, many=0)
+        eng.fit_gamma(g, wu, wv, budget, warm_start=False, batched=True,
+                      lanes=5)
+        assert calls == {"solve": 2, "many": 2}
+    finally:
+        cluster_engine_mod._REGISTRY.pop("spy", None)
+
+
+# ---------------------------------------------------------------------------
+# one-device-pass partition scorer
+# ---------------------------------------------------------------------------
+def test_score_partitions_matches_host_metrics():
+    g, wu, wv, budget = _setup()
+    labs = np.stack([
+        np.arange(g.n_nodes, dtype=np.int32),                  # singletons
+        solver_jax.lp_solve(g, wu, wv, 2.0, None, 8)[0],
+        np.zeros(g.n_nodes, dtype=np.int32),                   # one cluster
+    ])
+    ks, qs = cluster_engine_mod._score_partitions(g, labs)
+    for i in range(labs.shape[0]):
+        ku = np.unique(labs[i, :g.n_users]).size
+        kv = np.unique(labs[i, g.n_users:]).size
+        assert int(ks[i]) == ku + kv
+        assert float(qs[i]) == pytest.approx(
+            bipartite_modularity(g, labs[i]), abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharded solver parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("gamma,budget", [(1.0, None), (4.0, 135)])
+def test_sharded_matches_jax_mesh_of_one(gamma, budget):
+    g, wu, wv, _ = _setup()
+    a, ia = solver_jax.lp_solve(g, wu, wv, gamma, budget, 8)
+    b, ib = solver_sharded.lp_solve_sharded(g, wu, wv, gamma, budget, 8)
+    assert np.array_equal(a, b)
+    assert ia == ib
+
+
+def test_sharded_engine_build_smoke():
+    g = small_graph(seed=3)
+    sk = ClusterEngine(solver="jax_sharded").build(g, d=32, ratio=0.3)
+    assert sk.meta["solver"] == "jax_sharded"
+    assert sk.user_idx.shape == (g.n_users, 2)
+
+
+SHARDED_N_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+assert jax.device_count() == 4
+from repro.core import make_weights
+from repro.core import solver_jax, solver_sharded
+from repro.data import planted_coclusters
+g, _, _ = planted_coclusters(300, 240, k_true=12, avg_deg=10, seed=0)
+wu, wv = make_weights(g, "hws")
+for gamma, budget in ((1.0, None), (4.0, 135), (16.0, None)):
+    a, ia = solver_jax.lp_solve(g, wu, wv, gamma, budget, 8)
+    b, ib = solver_sharded.lp_solve_sharded(g, wu, wv, gamma, budget, 8)
+    assert np.array_equal(a, b), (gamma, budget, int(np.sum(a != b)))
+    assert ia == ib, (gamma, budget, ia, ib)
+print("SHARDED_N_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_matches_jax_mesh_of_n_subprocess():
+    """Bit-for-bit parity on a 4-device CPU mesh (device count is
+    process-global, so the forced host platform runs in a subprocess —
+    same trick as test_dryrun)."""
+    out = subprocess.run([sys.executable, "-c", SHARDED_N_CODE],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_N_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# graph: CSR memoization + chunked builder
+# ---------------------------------------------------------------------------
+def test_csr_and_degrees_memoized():
+    g = small_graph()
+    i1 = g.user_csr()
+    i2 = g.user_csr()
+    assert i1[0] is i2[0] and i1[1] is i2[1]
+    assert g.item_csr()[0] is g.item_csr()[0]
+    assert g.user_degrees() is g.user_degrees()
+    assert g.item_degrees() is g.item_degrees()
+
+
+def test_chunked_from_edges_matches_plain():
+    rng = np.random.default_rng(0)
+    eu = rng.integers(0, 500, 20_000)
+    ev = rng.integers(0, 400, 20_000)
+    a = BipartiteGraph.from_edges(500, 400, eu, ev)
+    b = BipartiteGraph.from_edges(500, 400, eu, ev, chunk_size=777)
+    c = BipartiteGraph.from_edge_blocks(
+        500, 400, [(eu[:5000], ev[:5000]), (eu[5000:], ev[5000:])])
+    for g in (b, c):
+        assert np.array_equal(a.edge_u, g.edge_u)
+        assert np.array_equal(a.edge_v, g.edge_v)
+        assert np.array_equal(a.perm_by_item, g.perm_by_item)
+
+
+def test_chunked_from_edges_validates():
+    with pytest.raises(ValueError):
+        BipartiteGraph.from_edges(2, 2, [0, 5], [0, 1], chunk_size=1)
+    with pytest.raises(ValueError):
+        BipartiteGraph.from_edges(2, 2, [0], [0], dedup=False,
+                                  chunk_size=1)
+    assert BipartiteGraph.from_edges(3, 3, [], [], chunk_size=2).n_edges \
+        == 0
+
+
+# ---------------------------------------------------------------------------
+# engine build == historical baco_build behaviour
+# ---------------------------------------------------------------------------
+def test_engine_build_matches_baco_build_wrapper():
+    from repro.core import baco_build
+    g = small_graph(seed=5)
+    a = ClusterEngine(solver="jax").build(g, d=64, ratio=0.3)
+    b = baco_build(g, d=64, ratio=0.3)
+    assert np.array_equal(a.user_idx, b.user_idx)
+    assert np.array_equal(a.item_idx, b.item_idx)
+    assert a.k_users == b.k_users and a.k_items == b.k_items
+
+
+# ---------------------------------------------------------------------------
+# architecture rule: solvers are reached via the ClusterEngine only
+# ---------------------------------------------------------------------------
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+REPO = SRC.parents[1]
+SOLVER_IMPORT = re.compile(
+    r"(?:from|import)\s+[\w.]*\bsolver_(?:jax|numpy|sharded)\b"
+    r"|from\s+[\w.]+\s+import\s+[^\n]*\bsolver_(?:jax|numpy|sharded)\b")
+BACO_BYPASS = re.compile(
+    # bare calls (engine METHOD calls have a preceding dot) ...
+    r"(?<![.\w])(?:baco_build|fit_gamma|secondary_user_labels)\s*\("
+    # ... and imports of the compatibility shims
+    r"|import\s+[^\n]*\b(?:baco_build|secondary_user_labels)\b")
+
+
+def _offenders(paths, pattern):
+    out = []
+    for path in paths:
+        text = path.read_text()
+        for m in pattern.finditer(text):
+            line = text.count("\n", 0, m.start()) + 1
+            out.append(f"{path}:{line}: {m.group(0)!r}")
+    return out
+
+
+def test_no_solver_imports_outside_core():
+    """solver_jax/solver_numpy/solver_sharded are ClusterEngine
+    implementation detail: only core/ may name them. (tests/ may too —
+    parity oracles — but no other layer.)"""
+    paths = [p for p in SRC.rglob("*.py") if "core" not in p.parts]
+    paths += sorted((REPO / "benchmarks").glob("*.py"))
+    paths += sorted((REPO / "examples").glob("*.py"))
+    offenders = _offenders(paths, SOLVER_IMPORT)
+    assert not offenders, (
+        "direct solver imports must route through "
+        "repro.core.ClusterEngine:\n" + "\n".join(offenders))
+
+
+def test_launch_bench_examples_use_cluster_engine():
+    """The historical baco_build/fit_gamma/secondary_user_labels wrappers
+    are core-internal compatibility shims; launch/serve/bench/example
+    call sites construct a ClusterEngine."""
+    paths = list((SRC / "launch").glob("*.py"))
+    paths += list((SRC / "serve").glob("*.py"))
+    paths += sorted((REPO / "benchmarks").glob("*.py"))
+    paths += sorted((REPO / "examples").glob("*.py"))
+    offenders = _offenders(paths, BACO_BYPASS)
+    assert not offenders, (
+        "call sites must go through repro.core.ClusterEngine "
+        "(build/fit_gamma/secondary_user_labels methods):\n"
+        + "\n".join(offenders))

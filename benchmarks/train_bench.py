@@ -1,0 +1,136 @@
+"""Training-pipeline benchmark: steps/sec per (trainer backend x chunk
+size) vs the seed host loop — the record behind the device-resident
+trainer's speedup claim.
+
+Builds one compressed model config, then times each registered trainer
+backend at batch 1024. The baseline row is ``host_seed`` — the seed
+implementation frozen end to end (scatter-add propagation, per-step
+numpy sample + transfers + blocking ``float(loss)``). ``host`` is the
+same per-step loop over THIS PR's scatter-free step (the fused parity
+oracle); the fused backends additionally amortize ONE dispatch over a
+whole lax.scan chunk with the sampler on device. Rounds are
+interleaved across backends and medianed, so machine drift hits every
+backend equally. CPU wall-time is NOT a TPU signal; re-run on real
+hardware with the same flag to recalibrate.
+
+``python benchmarks/train_bench.py --json [--out BENCH_train.json]``
+emits the machine-readable record:
+
+    {"bench": "train_pipeline", "platform": ..., "records":
+      [{"backend", "chunk", "steps_per_s", "speedup_vs_seed",
+        "speedup_vs_host"}, ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+CHUNKS = (1, 8, 32)
+
+
+def bench(dataset: str = "synth_xs", dim: int = 16, batch: int = 1024,
+          steps: int = 32, rounds: int = 5, ratio: float = 0.25,
+          chunks=CHUNKS):
+    """-> list of JSON-able {backend, chunk, steps_per_s, speedups}."""
+    from repro.core import ClusterEngine
+    from repro.data import paperlike_dataset
+    from repro.training import (Trainer, TrainConfig,
+                                available_trainer_backends)
+    _, _, _, train, _ = paperlike_dataset(dataset, seed=0)
+    sketch = ClusterEngine().build(train, d=dim, ratio=ratio)
+
+    configs = [("host_seed", 1), ("host", 1)]
+    for backend in sorted(available_trainer_backends()):
+        if backend in ("host", "host_seed"):
+            continue
+        configs += [(backend, c) for c in chunks]
+
+    trainers, times, errors = {}, {}, {}
+    for key in configs:
+        backend, chunk = key
+        cfg = TrainConfig(dim=dim, steps=10**9, batch_size=batch, lr=5e-3,
+                          backend=backend, chunk_size=chunk, seed=0)
+        try:
+            tr = Trainer(train, sketch, cfg)
+            warm = max(2 * chunk, 8)
+            tr.run(steps=warm, log_every=0)     # compile + warm caches
+            # one untimed round: a round of `steps` can include a
+            # remainder chunk (steps % chunk) that compiles on first use
+            tr.run(steps=warm + steps, log_every=0)
+            jax.block_until_ready(tr.params)
+        except Exception as exc:    # backend can't run on this host
+            errors[key] = str(exc)[:200]
+            continue
+        trainers[key] = [tr, warm + steps]
+        times[key] = []
+    for _ in range(rounds):         # interleave: drift hits all equally
+        for key, state in trainers.items():
+            tr, done = state
+            t0 = time.perf_counter()
+            state[1] = done = done + steps
+            tr.run(steps=done, log_every=0)
+            jax.block_until_ready(tr.params)
+            times[key].append(steps / (time.perf_counter() - t0))
+
+    med = {k: float(np.median(v)) for k, v in times.items()}
+    seed_sps = med.get(("host_seed", 1))
+    host_sps = med.get(("host", 1))
+    records = []
+    for key in configs:
+        backend, chunk = key
+        if key in errors:
+            records.append({"backend": backend, "chunk": int(chunk),
+                            "error": errors[key]})
+            continue
+        rec = {"backend": backend, "chunk": int(chunk),
+               "steps_per_s": round(med[key], 2)}
+        if seed_sps:
+            rec["speedup_vs_seed"] = round(med[key] / seed_sps, 2)
+        if host_sps:
+            rec["speedup_vs_host"] = round(med[key] / host_sps, 2)
+        records.append(rec)
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable perf record")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON record to this path "
+                         "(e.g. BENCH_train.json)")
+    ap.add_argument("--dataset", default="synth_xs")
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--steps", type=int, default=32,
+                    help="steps per timed round")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="interleaved timed rounds per backend (median)")
+    args = ap.parse_args(argv)
+    records = bench(dataset=args.dataset, dim=args.dim, batch=args.batch,
+                    steps=args.steps, rounds=args.rounds)
+    record = {"bench": "train_pipeline",
+              "platform": jax.default_backend(),
+              "n_devices": jax.device_count(),
+              "dataset": args.dataset, "dim": args.dim,
+              "batch": args.batch, "steps": args.steps,
+              "records": records}
+    text = json.dumps(record, indent=2)
+    if args.json:
+        print(text)
+    else:
+        for r in records:
+            print(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,8 @@
 from .synthetic import (synthetic_bipartite, planted_coclusters,
                         paperlike_dataset, DATASET_PRESETS)
-from .sampler import BPRSampler
+from .sampler import (BPRSampler, DeviceBPRSampler, make_sampler,
+                      available_samplers)
 
 __all__ = ["synthetic_bipartite", "planted_coclusters", "paperlike_dataset",
-           "DATASET_PRESETS", "BPRSampler"]
+           "DATASET_PRESETS", "BPRSampler", "DeviceBPRSampler",
+           "make_sampler", "available_samplers"]

@@ -24,6 +24,8 @@ __all__ = ["synthetic_bipartite", "planted_coclusters", "paperlike_dataset",
 # Named presets mirroring Table 3 / Table 10 statistics (scaled variants
 # provided because CI runs on one CPU core).
 DATASET_PRESETS: Dict[str, dict] = {
+    # sub-sampled synthetic preset for CI benchmarks / smoke tests
+    "synth_xs":    dict(n_users=500, n_items=400, avg_deg=8, k_true=24),
     "beauty_s":    dict(n_users=2_236, n_items=1_210, avg_deg=9, k_true=40),
     "gowalla_s":   dict(n_users=2_986, n_items=4_098, avg_deg=34, k_true=60),
     "yelp2018_s":  dict(n_users=3_167, n_items=3_805, avg_deg=49, k_true=60),

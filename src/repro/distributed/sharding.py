@@ -28,7 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["shard", "shard_map", "logical_to_spec", "current_mesh",
            "named_sharding", "batch_axes", "logical_mapping",
-           "current_mapping", "cluster_mesh", "edge_partition",
+           "current_mapping", "cluster_mesh", "data_mesh", "edge_partition",
            "pad_to_shards", "edge_partitioned_half_step"]
 
 
@@ -176,6 +176,12 @@ def cluster_mesh(n_devices: Optional[int] = None, axis: str = "edge") -> Mesh:
     if n_devices is not None:
         devs = devs[:n_devices]
     return Mesh(np.asarray(devs), (axis,))
+
+
+def data_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D "data" mesh over the local devices — the fused_sharded
+    trainer backend splits each BPR batch across it and psums grads."""
+    return cluster_mesh(n_devices, axis="data")
 
 
 def edge_partition(node_of_edge: np.ndarray, opp_of_edge: np.ndarray,

@@ -44,8 +44,11 @@ def paper_pipeline(args):
     cfg = TrainConfig(dim=args.dim, steps=args.steps,
                       batch_size=args.batch_size, lr=args.lr,
                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                      seed=args.seed)
+                      seed=args.seed, backend=args.trainer_backend,
+                      chunk_size=args.chunk_size, sampler=args.sampler)
     tr = Trainer(train, sketch, cfg)
+    print(f"[train] backend={tr.backend.name} sampler={tr.sampler.name} "
+          f"chunk={cfg.chunk_size}")
     if args.resume and tr.maybe_resume():
         print(f"[train] resumed at step {tr.step}")
     t_start = time.time()
@@ -109,6 +112,16 @@ def main(argv=None):
                     help="ClusterEngine solver: auto | jax | jax_sharded "
                          "| numpy (auto picks jax_sharded on multi-device "
                          "hosts)")
+    ap.add_argument("--trainer-backend", default="auto",
+                    help="trainer backend: auto | host (seed reference, "
+                         "per-step host sync) | fused (lax.scan chunks, "
+                         "device-resident) | fused_sharded (data-parallel "
+                         "over the local device mesh)")
+    ap.add_argument("--chunk-size", type=int, default=16,
+                    help="steps fused per dispatch (fused backends)")
+    ap.add_argument("--sampler", default=None,
+                    choices=["numpy", "device"],
+                    help="BPR sampler (default: the backend's native one)")
     ap.add_argument("--batched-gamma", action="store_true",
                     help="vmap-batched gamma grid search (concurrent "
                          "lanes; identical selection to the sequential "

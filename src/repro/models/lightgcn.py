@@ -20,7 +20,8 @@ from repro.core.sketch import Sketch
 from repro.embedding import EmbeddingEngine, EmbeddingSpec, init_codebook
 
 __all__ = ["LightGCNConfig", "from_sketch", "engines", "make_statics",
-           "init_params", "all_embeddings", "bpr_loss_fn", "score_all_items"]
+           "sorted_edge_statics", "init_params", "all_embeddings",
+           "bpr_loss_fn", "score_all_items", "eval_embeddings"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,16 +63,51 @@ def engines(cfg: LightGCNConfig):
     return u, v
 
 
+def sorted_edge_statics(edge_u, edge_v, edge_norm, n_users: int,
+                        n_items: int, perm_by_item=None) -> dict:
+    """Scatter-free propagation constants from a (user-sorted) edge list.
+
+    Both segment orientations as SORTED runs: the user side uses the
+    edge list as-is (edges arrive sorted by user), the item side a
+    stable item-order permutation of it — plus both CSR indptrs. The
+    propagation then reduces each side with a prefix-scan + boundary
+    diff instead of scatter-adds (XLA:CPU lowers scatter to a serial
+    update loop; the scan is ~4x faster and dominates the train step).
+    """
+    edge_u = np.asarray(edge_u)
+    edge_v = np.asarray(edge_v)
+    edge_norm = np.asarray(edge_norm)
+    if edge_u.size and np.any(np.diff(edge_u) < 0):
+        raise ValueError("edge_u must be sorted (BipartiteGraph edge "
+                         "order); searchsorted indptrs would be garbage")
+    # BipartiteGraph already carries this exact stable item-order
+    # permutation; only artifact loading (no graph) recomputes it
+    perm = (np.asarray(perm_by_item) if perm_by_item is not None
+            else np.argsort(edge_v, kind="stable"))
+    indptr_u = np.searchsorted(edge_u, np.arange(n_users + 1,
+                                                 dtype=np.int64))
+    indptr_v = np.searchsorted(edge_v[perm], np.arange(n_items + 1,
+                                                       dtype=np.int64))
+    return {
+        "edge_u": jnp.asarray(edge_u),
+        "edge_v": jnp.asarray(edge_v),
+        "edge_norm": jnp.asarray(edge_norm),
+        "edge_u_byitem": jnp.asarray(edge_u[perm]),
+        "edge_norm_byitem": jnp.asarray(edge_norm[perm]),
+        "indptr_u": jnp.asarray(indptr_u.astype(np.int32)),
+        "indptr_v": jnp.asarray(indptr_v.astype(np.int32)),
+    }
+
+
 def make_statics(graph: BipartiteGraph, sketch: Optional[Sketch] = None):
-    """Device-ready constants: normalized edges + sketch index arrays."""
+    """Device-ready constants: normalized edges (both segment
+    orientations, for the scatter-free propagation) + sketch arrays."""
     du = np.maximum(graph.user_degrees(), 1).astype(np.float32)
     dv = np.maximum(graph.item_degrees(), 1).astype(np.float32)
     norm = 1.0 / np.sqrt(du[graph.edge_u] * dv[graph.edge_v])
-    statics = {
-        "edge_u": jnp.asarray(graph.edge_u),
-        "edge_v": jnp.asarray(graph.edge_v),
-        "edge_norm": jnp.asarray(norm),
-    }
+    statics = sorted_edge_statics(graph.edge_u, graph.edge_v, norm,
+                                  graph.n_users, graph.n_items,
+                                  perm_by_item=graph.perm_by_item)
     if sketch is not None:
         statics["sketch_u"] = jnp.asarray(sketch.user_idx)
         statics["sketch_v"] = jnp.asarray(sketch.item_idx)
@@ -98,8 +134,107 @@ def _base_embeddings(params, statics, cfg: LightGCNConfig):
     return params["user_table"], params["item_table"]
 
 
+def _segsum_sorted(data, indptr):
+    """Segment sum of sorted-run rows: prefix scan + boundary diff.
+    data [E, d] grouped into len(indptr)-1 contiguous segments.
+
+    Precision trade: each segment is a difference of two global-prefix
+    values, so absolute error scales with the running-sum magnitude
+    (~eps * |prefix|) instead of the segment. For zero-mean embedding
+    columns the prefix is a random walk (~sqrt(E) * scale), harmless at
+    the repo's dataset scales (pinned vs the scatter path in tests); at
+    1e8+ edges prefer rebasing the scan per chunk or an f32->f64 scan."""
+    if data.shape[0] == 0:
+        return jnp.zeros((indptr.shape[0] - 1, data.shape[1]), data.dtype)
+    c = jax.lax.associative_scan(jnp.add, data, axis=0)
+    c = jnp.concatenate([jnp.zeros((1, data.shape[1]), data.dtype), c])
+    return c[indptr[1:]] - c[indptr[:-1]]
+
+
+def _make_propagate(statics):
+    """One scatter-free LightGCN layer (cu, cv) -> (nu, nv).
+
+    Forward aggregates each side over its SORTED edge orientation; the
+    custom VJP keeps the backward scatter-free too — the adjoint of
+    "sum over edges into user" is "sum over edges into item", which is
+    again a sorted segment sum under the opposite orientation (autodiff
+    would instead emit the gathers' scatter-add transpose)."""
+    ev_u, w_u = statics["edge_v"], statics["edge_norm"]
+    eu_i, w_i = statics["edge_u_byitem"], statics["edge_norm_byitem"]
+    iu, iv = statics["indptr_u"], statics["indptr_v"]
+
+    def impl(cu, cv):
+        nu = _segsum_sorted(cv[ev_u] * w_u[:, None], iu)
+        nv = _segsum_sorted(cu[eu_i] * w_i[:, None], iv)
+        return nu, nv
+
+    prop = jax.custom_vjp(impl)
+
+    def fwd(cu, cv):
+        return impl(cu, cv), None
+
+    def bwd(_, g):
+        gnu, gnv = g
+        d_cv = _segsum_sorted(gnu[eu_i] * w_i[:, None], iv)
+        d_cu = _segsum_sorted(gnv[ev_u] * w_u[:, None], iu)
+        return d_cu, d_cv
+
+    prop.defvjp(fwd, bwd)
+    return prop
+
+
 def all_embeddings(params, statics, cfg: LightGCNConfig):
     """LightGCN propagation; returns (U [n_users,d], V [n_items,d])."""
+    u, v = _base_embeddings(params, statics, cfg)
+    if "indptr_u" in statics:
+        prop = _make_propagate(statics)
+    else:                          # minimal statics: scatter fallback
+        eu, ev, w = statics["edge_u"], statics["edge_v"], \
+            statics["edge_norm"]
+        prop = lambda cu, cv: (
+            jax.ops.segment_sum(cv[ev] * w[:, None], eu,
+                                num_segments=cfg.n_users),
+            jax.ops.segment_sum(cu[eu] * w[:, None], ev,
+                                num_segments=cfg.n_items))
+    acc_u, acc_v = u, v
+    cu, cv = u, v
+    for _ in range(cfg.n_layers):
+        cu, cv = prop(cu, cv)
+        acc_u = acc_u + cu
+        acc_v = acc_v + cv
+    k = cfg.n_layers + 1
+    return acc_u / k, acc_v / k
+
+
+def bpr_loss_fn(params, statics, batch, cfg: LightGCNConfig):
+    """BPR over (user, pos, neg) with L2 on the *ego* embeddings.
+
+    The propagated and ego tables are concatenated per side so each
+    batch index is gathered ONCE (3 gathers instead of 6, and 3 adjoint
+    accumulations in the backward) — same values, the gather/transpose
+    op count is what dominates small-graph steps on CPU."""
+    u_all, v_all = all_embeddings(params, statics, cfg)
+    u0, v0 = _base_embeddings(params, statics, cfg)
+    d = cfg.dim
+    uu = jnp.concatenate([u_all, u0], axis=1)[batch["user"]]
+    pi = jnp.concatenate([v_all, v0], axis=1)[batch["pos"]]
+    ni = jnp.concatenate([v_all, v0], axis=1)[batch["neg"]]
+    pos = jnp.sum(uu[:, :d] * pi[:, :d], axis=-1)
+    neg = jnp.sum(uu[:, :d] * ni[:, :d], axis=-1)
+    loss = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
+    reg = (jnp.sum(uu[:, d:] ** 2) + jnp.sum(pi[:, d:] ** 2)
+           + jnp.sum(ni[:, d:] ** 2)) / batch["user"].shape[0]
+    return loss + cfg.l2 * reg
+
+
+# ---------------------------------------------------------------------------
+# frozen seed twins (benchmark reference only — the pre-PR4 train step:
+# scatter-add segment sums and one gather per readout term). Kept verbatim
+# so BENCH_train.json's "seed host loop" baseline measures the actual seed
+# implementation, the same pattern as core.solver_jax.lp_solve_hostloop.
+# ---------------------------------------------------------------------------
+def all_embeddings_seed(params, statics, cfg: LightGCNConfig):
+    """Seed propagation: jax.ops.segment_sum scatter-adds (frozen)."""
     u, v = _base_embeddings(params, statics, cfg)
     eu, ev, w = statics["edge_u"], statics["edge_v"], statics["edge_norm"]
     acc_u, acc_v = u, v
@@ -116,9 +251,9 @@ def all_embeddings(params, statics, cfg: LightGCNConfig):
     return acc_u / k, acc_v / k
 
 
-def bpr_loss_fn(params, statics, batch, cfg: LightGCNConfig):
-    """BPR over (user, pos, neg) with L2 on the *ego* embeddings."""
-    u_all, v_all = all_embeddings(params, statics, cfg)
+def bpr_loss_fn_seed(params, statics, batch, cfg: LightGCNConfig):
+    """Seed BPR step (frozen): six separate readout gathers."""
+    u_all, v_all = all_embeddings_seed(params, statics, cfg)
     uu = u_all[batch["user"]]
     pi = v_all[batch["pos"]]
     ni = v_all[batch["neg"]]
@@ -131,7 +266,19 @@ def bpr_loss_fn(params, statics, batch, cfg: LightGCNConfig):
     return loss + cfg.l2 * reg
 
 
-def score_all_items(params, statics, cfg: LightGCNConfig, user_ids):
-    """[len(user_ids), n_items] scores (eval-time)."""
+def eval_embeddings(params, statics, cfg: LightGCNConfig, user_ids):
+    """(U[user_ids] [m,d], V [n_items,d]) propagated embeddings.
+
+    The streaming evaluator scores these in item blocks with an
+    on-device running top-k (`training.eval.topk_streaming`) — the
+    O(users x items) score matrix of `score_all_items` never
+    materializes."""
     u_all, v_all = all_embeddings(params, statics, cfg)
-    return u_all[user_ids] @ v_all.T
+    return u_all[user_ids], v_all
+
+
+def score_all_items(params, statics, cfg: LightGCNConfig, user_ids):
+    """[len(user_ids), n_items] scores (eval-time; dense — prefer
+    `eval_embeddings` + streaming top-k for large item sets)."""
+    u, v = eval_embeddings(params, statics, cfg, user_ids)
+    return u @ v.T

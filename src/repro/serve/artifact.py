@@ -58,8 +58,13 @@ class CompressedArtifact:
     # -- construction -------------------------------------------------------
     @classmethod
     def from_trainer(cls, trainer) -> "CompressedArtifact":
-        """Snapshot a Trainer into a deployable artifact (host numpy)."""
-        params = jax.tree.map(np.asarray, trainer.params)
+        """Snapshot a Trainer into a deployable artifact (host numpy).
+
+        Backend-agnostic: `device_get` gathers the params whatever the
+        trainer backend left them as (host numpy, single-device, or
+        replicated over the fused_sharded data mesh)."""
+        params = jax.tree.map(lambda p: np.asarray(jax.device_get(p)),
+                              trainer.params)
         edges = {k: np.asarray(trainer.statics[k])
                  for k in ("edge_u", "edge_v", "edge_norm")}
         cfg = trainer.mcfg
@@ -68,6 +73,8 @@ class CompressedArtifact:
         provenance = sketch.meta_json() if sketch is not None else {}
         provenance.update({"lookup_backend": cfg.lookup_backend,
                            "train_steps": int(trainer.step),
+                           "trainer_backend": trainer.backend.name,
+                           "sampler": trainer.sampler.name,
                            "exported_by": "Trainer.export"})
         return cls(params=params, edges=edges, sketch=sketch, model=model,
                    provenance=provenance)
@@ -84,8 +91,14 @@ class CompressedArtifact:
         return LightGCNConfig(**self.model)
 
     def statics(self) -> dict:
-        """Device-ready statics for the scoring fn (edges + sketch)."""
-        statics = dict(self.edges)
+        """Device-ready statics for the scoring fn (edges + sketch).
+        Rebuilds the sorted-orientation arrays so serving gets the same
+        scatter-free propagation as training."""
+        from repro.models.lightgcn import sorted_edge_statics
+        statics = sorted_edge_statics(
+            self.edges["edge_u"], self.edges["edge_v"],
+            self.edges["edge_norm"], self.model["n_users"],
+            self.model["n_items"])
         if self.sketch is not None:
             statics["sketch_u"] = self.sketch.user_idx
             statics["sketch_v"] = self.sketch.item_idx

@@ -1,5 +1,10 @@
 from . import optimizer, checkpoint, compress, eval as eval_metrics
-from .train_loop import Trainer, TrainConfig
+from .train_loop import (Trainer, TrainConfig, TrainerBackend,
+                         register_trainer_backend,
+                         available_trainer_backends,
+                         normalize_trainer_backend)
 
 __all__ = ["optimizer", "checkpoint", "compress", "eval_metrics",
-           "Trainer", "TrainConfig"]
+           "Trainer", "TrainConfig", "TrainerBackend",
+           "register_trainer_backend", "available_trainer_backends",
+           "normalize_trainer_backend"]

@@ -163,8 +163,20 @@ class CheckpointManager:
         self.keep = keep
         self.every = every
 
-    def maybe_save(self, step: int, tree, extra=None, force=False):
-        if not force and (self.every <= 0 or step % self.every != 0):
+    def due(self, step: int, prev_step: Optional[int] = None) -> bool:
+        """True when a save is owed at `step`. With `prev_step`, owed
+        when ANY multiple of `every` lies in (prev_step, step] — chunked
+        trainers advance several steps per host visit and may only land
+        near, not on, the cadence multiple."""
+        if self.every <= 0:
+            return False
+        if prev_step is None:
+            return step % self.every == 0
+        return (step // self.every) > (prev_step // self.every)
+
+    def maybe_save(self, step: int, tree, extra=None, force=False,
+                   prev_step: Optional[int] = None):
+        if not force and not self.due(step, prev_step):
             return None
         path = save_checkpoint(self.directory, step, tree, extra)
         self._gc()

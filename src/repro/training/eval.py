@@ -1,31 +1,153 @@
-"""Ranking metrics: Recall@K and NDCG@K (paper's evaluation protocol)."""
+"""Ranking metrics: Recall@K and NDCG@K (paper's evaluation protocol).
+
+Two top-k paths:
+
+* ``topk_from_scores`` — dense host numpy over a materialized
+  [n_users, n_items] score matrix (kept for small fixtures and as the
+  parity oracle).
+* ``topk_streaming`` — device-resident: items are scored in fixed-size
+  blocks against a running on-device top-k, and training interactions
+  are masked by scattering -inf into each block on device. Peak memory
+  is O(users x block + users x k); the full score matrix never exists,
+  on device or host. ``Trainer.evaluate`` uses this path.
+"""
 from __future__ import annotations
 
 from typing import Dict, Tuple
 
 import numpy as np
 
-__all__ = ["recall_ndcg_at_k", "topk_from_scores"]
+__all__ = ["recall_ndcg_at_k", "topk_from_scores", "topk_streaming"]
 
 
 def topk_from_scores(scores: np.ndarray, k: int,
                      exclude: Tuple[np.ndarray, np.ndarray] | None = None,
                      ) -> np.ndarray:
-    """Row-wise top-k item ids, masking out training interactions."""
+    """Row-wise top-k item ids, masking out training interactions.
+
+    ``exclude`` index arrays are forced to int dtype — an empty
+    ``np.asarray([])`` is float64, which numpy would otherwise treat as
+    an (invalid) fancy float index."""
     s = np.array(scores, dtype=np.float32, copy=True)
     if exclude is not None:
-        s[exclude[0], exclude[1]] = -np.inf
+        rows = np.asarray(exclude[0], dtype=np.intp)
+        cols = np.asarray(exclude[1], dtype=np.intp)
+        if rows.size:
+            s[rows, cols] = -np.inf
     idx = np.argpartition(-s, kth=min(k, s.shape[1] - 1), axis=1)[:, :k]
     part = np.take_along_axis(s, idx, axis=1)
     order = np.argsort(-part, axis=1)
     return np.take_along_axis(idx, order, axis=1)
 
 
+_TOPK_MERGE = []            # one process-wide jitted merge program
+
+
+def _topk_merge_block(vals, idx, u, v_block, er, ec, i0, n, k):
+    """One streaming-top-k block merge. The jitted program lives at
+    module scope (compile keyed on shapes + k), so repeated evaluate
+    calls reuse it instead of retracing per call."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+
+    if not _TOPK_MERGE:
+        @functools.partial(jax.jit, static_argnums=(8,))
+        def merge(vals, idx, u, v_block, er, ec, i0, n, k):
+            s = u @ v_block.T                             # [m, block]
+            col = i0 + jnp.arange(v_block.shape[0], dtype=jnp.int32)
+            s = jnp.where(col[None, :] < n, s, -jnp.inf)  # drop pad items
+            s = s.at[er, ec].set(-jnp.inf, mode="drop")   # sentinels drop
+            # block candidates FIRST: top_k keeps the earliest position
+            # among equal values, so the block's real (distinct) item
+            # ids win -inf ties against the init-carry placeholders —
+            # the first block has >= k items, so after it the carry only
+            # ever holds distinct real ids (no duplicated filler)
+            cand_vals = jnp.concatenate([s, vals], axis=1)
+            cand_idx = jnp.concatenate(
+                [jnp.broadcast_to(col[None, :], s.shape).astype(jnp.int32),
+                 idx], axis=1)
+            top_vals, pos = jax.lax.top_k(cand_vals, k)
+            return top_vals, jnp.take_along_axis(cand_idx, pos, axis=1)
+
+        _TOPK_MERGE.append(merge)
+    return _TOPK_MERGE[0](vals, idx, u, v_block, er, ec, i0, n, k)
+
+
+def topk_streaming(u_emb, v_emb, k: int, *, block: int = 4096,
+                   exclude: Tuple[np.ndarray, np.ndarray] | None = None,
+                   ) -> np.ndarray:
+    """Row-wise top-k of ``u_emb @ v_emb.T`` without the score matrix.
+
+    ``u_emb`` [m, d] / ``v_emb`` [n, d] are device (or host) arrays;
+    items are processed in blocks of ``block``: each block's [m, block]
+    scores are computed on device, excluded (row, item) pairs falling in
+    the block are scattered to -inf, and a concat + ``lax.top_k`` merges
+    the block into the running [m, k] (values, ids). Exclusion pairs are
+    bucketed per block on the host (indices only) and padded to the max
+    bucket size with out-of-range sentinels that the scatter drops, so
+    every block runs the same compiled program. Within a block, ties
+    break toward the lower item id; rows with fewer than k scoreable
+    items are filled with distinct excluded/pad item ids.
+
+    Returns host int32 [m, k] item ids.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    m = int(u_emb.shape[0])
+    n = int(v_emb.shape[0])
+    if k > n:
+        raise ValueError(f"k={k} exceeds n_items={n}")
+    block = int(min(max(block, k), n))
+    nb = -(-n // block)
+
+    # host-side per-block exclusion buckets (row, local col), padded
+    if exclude is not None and np.asarray(exclude[0]).size:
+        rows = np.asarray(exclude[0], dtype=np.int32)
+        cols = np.asarray(exclude[1], dtype=np.int32)
+        order = np.argsort(cols, kind="stable")
+        rows, cols = rows[order], cols[order]
+        bounds = np.searchsorted(cols, np.arange(nb + 1, dtype=np.int64)
+                                 * block)
+        emax = max(1, int(np.max(np.diff(bounds))))
+        ex_r = np.full((nb, emax), m, dtype=np.int32)     # sentinel: row m
+        ex_c = np.zeros((nb, emax), dtype=np.int32)
+        for b in range(nb):
+            lo, hi = int(bounds[b]), int(bounds[b + 1])
+            ex_r[b, :hi - lo] = rows[lo:hi]
+            ex_c[b, :hi - lo] = cols[lo:hi] - b * block
+    else:
+        ex_r = np.full((nb, 1), m, dtype=np.int32)
+        ex_c = np.zeros((nb, 1), dtype=np.int32)
+
+    u = jnp.asarray(u_emb)
+    v = jnp.asarray(v_emb)
+    pad = nb * block - n
+    if pad:
+        v = jnp.concatenate([v, jnp.zeros((pad, v.shape[1]), v.dtype)])
+    ex_r = jnp.asarray(ex_r)
+    ex_c = jnp.asarray(ex_c)
+
+    vals = jnp.full((m, k), -jnp.inf, dtype=jnp.float32)
+    idx = jnp.zeros((m, k), dtype=jnp.int32)
+    for b in range(nb):
+        vals, idx = _topk_merge_block(vals, idx, u,
+                                      v[b * block:(b + 1) * block],
+                                      ex_r[b], ex_c[b],
+                                      jnp.int32(b * block), jnp.int32(n),
+                                      k)
+    return np.asarray(idx)
+
+
 def recall_ndcg_at_k(topk: np.ndarray, test_user: np.ndarray,
                      test_item: np.ndarray, user_ids: np.ndarray,
                      k: int = 20) -> Dict[str, float]:
-    """topk [n_eval_users, k] from topk_from_scores; metrics averaged over
-    users that have at least one test interaction (paper protocol)."""
+    """topk [n_eval_users, k] from a top-k path above; metrics averaged
+    over users that have at least one test interaction (paper protocol).
+    Recall@K = hits / |test items| — the standard LightGCN/GraphHash
+    denominator (NOT min(|test|, k), which inflates recall for users
+    with more than K held-out items)."""
     from collections import defaultdict
     truth = defaultdict(set)
     for u, i in zip(test_user, test_item):
@@ -37,7 +159,7 @@ def recall_ndcg_at_k(topk: np.ndarray, test_user: np.ndarray,
         if not t:
             continue
         hits = np.asarray([int(i) in t for i in row[:k]], dtype=np.float32)
-        recalls.append(hits.sum() / min(len(t), k))
+        recalls.append(hits.sum() / len(t))
         dcg = float((hits * inv_log).sum())
         idcg = float(inv_log[:min(len(t), k)].sum())
         ndcgs.append(dcg / idcg if idcg > 0 else 0.0)

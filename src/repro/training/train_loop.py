@@ -1,9 +1,35 @@
 """End-to-end LightGCN trainer (the paper's experimental pipeline).
 
-build sketch -> init codebooks -> BPR steps (jit) -> Recall/NDCG@20.
+build sketch -> init codebooks -> BPR steps -> Recall/NDCG@20, behind a
+trainer-backend registry mirroring the ClusterEngine/EmbeddingEngine
+pattern:
+
+* ``host`` — the seed LOOP structure over the current train step:
+  python while loop, one jitted step per iteration, numpy sampler by
+  default, a blocking ``float(loss)`` every step. The parity oracle:
+  fused backends are pinned bitwise against it (run it with
+  ``sampler="device"`` to share their batch stream).
+* ``host_seed`` — the seed implementation frozen END TO END (seed
+  model step AND loop). Benchmark reference only; numerically close
+  to, but not bitwise with, ``host`` (the scatter-free step
+  reassociates f32 sums).
+* ``fused`` — device-resident pipeline: the on-device BPR sampler and
+  the train step live inside ONE ``lax.scan`` over a chunk of step
+  indices, jitted with donated ``(params, opt_state)``. Per-step losses
+  come back as one device array per chunk — zero host copies inside a
+  chunk. Chunks never straddle a checkpoint-cadence multiple, so the
+  save points (and therefore ``resume=True`` bitwise identity) are
+  exactly the host backend's.
+* ``fused_sharded`` — the fused chunk shard_mapped over the 1-D "data"
+  mesh (``distributed.sharding.data_mesh``): every device samples the
+  identical GLOBAL batch (so results are device-count invariant up to
+  f32 psum reassociation), takes its contiguous shard, and grads/loss
+  cross devices via one psum per step.
+
 Fault tolerance: CheckpointManager captures (params, opt state, sampler
-state, rng); `resume=True` continues bitwise-identically (tested in
-tests/test_fault_tolerance.py).
+state); `resume=True` continues bitwise-identically on every backend
+(tested in tests/test_fault_tolerance.py) because sampling is a pure
+function of (seed, step).
 """
 from __future__ import annotations
 
@@ -17,13 +43,15 @@ import numpy as np
 
 from repro.core.graph import BipartiteGraph
 from repro.core.sketch import Sketch
-from repro.data.sampler import BPRSampler
+from repro.data.sampler import make_sampler
 from repro.models import lightgcn as L
 from repro.training import optimizer as opt_lib
 from repro.training.checkpoint import CheckpointManager
-from repro.training.eval import recall_ndcg_at_k, topk_from_scores
+from repro.training.eval import recall_ndcg_at_k, topk_streaming
 
-__all__ = ["TrainConfig", "Trainer"]
+__all__ = ["TrainConfig", "Trainer", "TrainerBackend",
+           "register_trainer_backend", "available_trainer_backends",
+           "normalize_trainer_backend"]
 
 
 @dataclasses.dataclass
@@ -40,6 +68,256 @@ class TrainConfig:
     eval_k: int = 20
     # EmbeddingEngine backend for all table lookups (None -> auto)
     lookup_backend: Optional[str] = None
+    # trainer backend: host | fused | fused_sharded (None/auto -> host)
+    backend: Optional[str] = None
+    # steps fused per device dispatch (fused backends)
+    chunk_size: int = 16
+    # sampler: numpy | device (None -> the backend's default)
+    sampler: Optional[str] = None
+    # fused_sharded: devices in the data mesh (None -> all local)
+    n_devices: Optional[int] = None
+    # streaming evaluation: items scored per block
+    eval_item_block: int = 4096
+
+
+# ---------------------------------------------------------------------------
+# trainer backend registry
+# ---------------------------------------------------------------------------
+class TrainerBackend:
+    """One training strategy: owns the compiled step/chunk programs and
+    drives trainer.(params, opt_state, step) forward. Subclass and
+    ``register_trainer_backend`` to add one."""
+
+    name = "?"
+    default_sampler = "numpy"
+
+    def setup(self, trainer: "Trainer"):
+        """Build compiled programs against the trainer's model/optimizer."""
+
+    def run(self, trainer: "Trainer", steps: int, log_every: int):
+        """Advance to `steps` total steps; returns per-step host losses."""
+        raise NotImplementedError
+
+
+_TRAINER_BACKENDS = {}
+
+
+def register_trainer_backend(cls):
+    _TRAINER_BACKENDS[cls.name] = cls
+    return cls
+
+
+def available_trainer_backends():
+    return tuple(sorted(_TRAINER_BACKENDS))
+
+
+def normalize_trainer_backend(name: Optional[str]) -> Optional[str]:
+    """None/'auto' -> None (Trainer picks 'host'); validates otherwise."""
+    if name is None or name == "auto":
+        return None
+    if name not in _TRAINER_BACKENDS:
+        raise KeyError(f"unknown trainer backend {name!r}: "
+                       f"expected one of {available_trainer_backends()}")
+    return name
+
+
+def _make_trainer_backend(name: Optional[str]) -> TrainerBackend:
+    return _TRAINER_BACKENDS[normalize_trainer_backend(name) or "host"]()
+
+
+@register_trainer_backend
+class HostBackend(TrainerBackend):
+    """The seed loop structure over the CURRENT train step: per-step
+    dispatch + per-step host sync. Parity oracle for the fused
+    backends (see HostSeedBackend for the fully frozen seed step)."""
+
+    name = "host"
+    default_sampler = "numpy"
+
+    def setup(self, trainer):
+        mcfg, optimizer, statics = trainer.mcfg, trainer.optimizer, \
+            trainer.statics
+
+        @jax.jit
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(L.bpr_loss_fn)(
+                params, statics, batch, mcfg)
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        trainer._train_step = train_step
+
+    def run(self, trainer, steps, log_every):
+        losses = []
+        t0 = time.time()
+        while trainer.step < steps:
+            u, p, n = trainer.sampler.next_batch()
+            batch = {"user": jnp.asarray(u), "pos": jnp.asarray(p),
+                     "neg": jnp.asarray(n)}
+            trainer.params, trainer.opt_state, loss = trainer._train_step(
+                trainer.params, trainer.opt_state, batch)
+            trainer.step += 1
+            losses.append(float(loss))
+            trainer._maybe_checkpoint()
+            if log_every and trainer.step % log_every == 0:
+                print(f"  step {trainer.step}: loss="
+                      f"{np.mean(losses[-log_every:]):.4f} "
+                      f"({time.time()-t0:.1f}s)")
+        return losses
+
+
+@register_trainer_backend
+class HostSeedBackend(HostBackend):
+    """The seed implementation frozen END TO END: the host loop driving
+    the seed model step (scatter-add segment sums, six readout gathers).
+    Benchmark reference only — BENCH_train.json's "seed host loop"
+    baseline — the same pattern as the ClusterEngine's jax_hostloop
+    solver. Numerically equivalent to `host` (identical math, different
+    op schedule), but not bitwise: the scatter-free rewrite reassociates
+    f32 segment sums."""
+
+    name = "host_seed"
+    default_sampler = "numpy"
+
+    def setup(self, trainer):
+        mcfg, optimizer = trainer.mcfg, trainer.optimizer
+        statics = {k: v for k, v in trainer.statics.items()
+                   if not k.startswith("indptr") and "byitem" not in k}
+
+        @jax.jit
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(L.bpr_loss_fn_seed)(
+                params, statics, batch, mcfg)
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        trainer._train_step = train_step
+
+
+@register_trainer_backend
+class FusedBackend(TrainerBackend):
+    """lax.scan-fused chunks: sample + step, chunk_size steps per
+    dispatch, donated (params, opt_state), one loss array per chunk."""
+
+    name = "fused"
+    default_sampler = "device"
+
+    def setup(self, trainer):
+        sample = getattr(trainer.sampler, "sample_fn", None)
+        if sample is None:
+            raise ValueError(
+                f"trainer backend {self.name!r} needs an on-device sampler "
+                f"exposing sample_fn (sampler='device'), got "
+                f"{type(trainer.sampler).__name__}")
+        self._chunk = jax.jit(self._build_chunk(trainer, sample),
+                              donate_argnums=(0, 1))
+
+    def _build_chunk(self, trainer, sample):
+        mcfg, optimizer, statics = trainer.mcfg, trainer.optimizer, \
+            trainer.statics
+
+        def chunk(params, opt_state, seed, step_idx):
+            def step_fn(carry, step):
+                params, opt_state = carry
+                u, p, n = sample(seed, step)
+                batch = {"user": u, "pos": p, "neg": n}
+                loss, grads = jax.value_and_grad(L.bpr_loss_fn)(
+                    params, statics, batch, mcfg)
+                params, opt_state = optimizer.update(grads, opt_state,
+                                                     params)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                step_fn, (params, opt_state), step_idx)
+            return params, opt_state, losses
+
+        return chunk
+
+    def _chunk_len(self, trainer, steps) -> int:
+        """Next chunk length: chunk_size, clipped so the chunk ends at
+        `steps` and never straddles a checkpoint-cadence multiple (save
+        points stay exactly the host backend's)."""
+        n = min(max(1, int(trainer.cfg.chunk_size)), steps - trainer.step)
+        if trainer.ckpt is not None and trainer.ckpt.every > 0:
+            to_ckpt = trainer.ckpt.every - trainer.step % trainer.ckpt.every
+            n = min(n, to_ckpt)
+        return n
+
+    def run(self, trainer, steps, log_every):
+        losses = []
+        t0 = time.time()
+        while trainer.step < steps:
+            n = self._chunk_len(trainer, steps)
+            step_idx = jnp.arange(trainer.step, trainer.step + n,
+                                  dtype=jnp.int32)
+            trainer.params, trainer.opt_state, chunk_losses = self._chunk(
+                trainer.params, trainer.opt_state, trainer.sampler.seed,
+                step_idx)
+            prev = trainer.step
+            trainer.step += n
+            trainer.sampler.step = trainer.step
+            losses.extend(np.asarray(chunk_losses).tolist())  # 1 copy/chunk
+            trainer._maybe_checkpoint(prev_step=prev)
+            if log_every and trainer.step // log_every > prev // log_every:
+                print(f"  step {trainer.step}: loss="
+                      f"{np.mean(losses[-log_every:]):.4f} "
+                      f"({time.time()-t0:.1f}s)")
+        return losses
+
+
+@register_trainer_backend
+class FusedShardedBackend(FusedBackend):
+    """Data-parallel fused chunks over the "data" mesh: replicated
+    params, batch sharded by contiguous slices of the global sample,
+    grads psum'd — one collective per step, still zero host copies."""
+
+    name = "fused_sharded"
+    default_sampler = "device"
+
+    def _build_chunk(self, trainer, sample):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import data_mesh, shard_map
+
+        mcfg, optimizer, statics = trainer.mcfg, trainer.optimizer, \
+            trainer.statics
+        mesh = data_mesh(trainer.cfg.n_devices)
+        n_dev = int(mesh.devices.size)
+        batch = int(trainer.cfg.batch_size)
+        if batch % n_dev:
+            raise ValueError(f"batch_size {batch} not divisible by the "
+                             f"{n_dev}-device data mesh")
+        local = batch // n_dev
+
+        def chunk(params, opt_state, seed, step_idx):
+            idx = jax.lax.axis_index("data")
+
+            def step_fn(carry, step):
+                params, opt_state = carry
+                # every device draws the identical GLOBAL batch, then
+                # takes its contiguous shard -> the sampled stream is
+                # invariant to the device count
+                u, p, n = sample(seed, step)
+                sl = lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, idx * local, local)
+                b = {"user": sl(u), "pos": sl(p), "neg": sl(n)}
+                loss, grads = jax.value_and_grad(L.bpr_loss_fn)(
+                    params, statics, b, mcfg)
+                # mean over equal local means == global batch mean
+                loss = jax.lax.psum(loss, "data") / n_dev
+                grads = jax.tree.map(
+                    lambda g: jax.lax.psum(g, "data") / n_dev, grads)
+                params, opt_state = optimizer.update(grads, opt_state,
+                                                     params)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                step_fn, (params, opt_state), step_idx)
+            return params, opt_state, losses
+
+        return shard_map(chunk, mesh=mesh,
+                         in_specs=(P(), P(), P(), P()),
+                         out_specs=(P(), P(), P()))
 
 
 class Trainer:
@@ -52,28 +330,30 @@ class Trainer:
                                   n_layers=cfg.n_layers, l2=cfg.l2,
                                   lookup_backend=cfg.lookup_backend)
         self.statics = L.make_statics(graph, sketch)
-        self.sampler = BPRSampler(graph, cfg.batch_size, seed=cfg.seed)
+        self.backend = _make_trainer_backend(cfg.backend)
+        self.sampler = make_sampler(cfg.sampler or
+                                    self.backend.default_sampler,
+                                    graph, cfg.batch_size, seed=cfg.seed)
         self.optimizer = opt_lib.adamw(lr=cfg.lr)
         key = jax.random.PRNGKey(cfg.seed)
         self.params = L.init_params(key, self.mcfg)
         self.opt_state = self.optimizer.init(self.params)
         self.step = 0
-        mcfg, optimizer, statics = self.mcfg, self.optimizer, self.statics
-
-        @jax.jit
-        def train_step(params, opt_state, batch):
-            loss, grads = jax.value_and_grad(L.bpr_loss_fn)(
-                params, statics, batch, mcfg)
-            params, opt_state = optimizer.update(grads, opt_state, params)
-            return params, opt_state, loss
-
-        self._train_step = train_step
         self.ckpt = (CheckpointManager(cfg.ckpt_dir, every=cfg.ckpt_every)
                      if cfg.ckpt_dir else None)
+        self.backend.setup(self)
 
     # -- checkpoint glue -----------------------------------------------------
     def _state_tree(self):
         return {"params": self.params, "opt": self.opt_state}
+
+    def _maybe_checkpoint(self, prev_step: Optional[int] = None,
+                          force: bool = False):
+        if self.ckpt is not None:
+            self.ckpt.maybe_save(self.step, self._state_tree(),
+                                 extra={"sampler":
+                                        self.sampler.state_dict()},
+                                 force=force, prev_step=prev_step)
 
     def maybe_resume(self) -> bool:
         if self.ckpt is None:
@@ -81,7 +361,10 @@ class Trainer:
         step, tree, extra = self.ckpt.restore_latest(self._state_tree())
         if step is None:
             return False
-        self.params, self.opt_state = tree["params"], tree["opt"]
+        # restored leaves are host numpy; put them back on device so the
+        # fused chunks can donate real device buffers
+        self.params = jax.device_put(tree["params"])
+        self.opt_state = jax.device_put(tree["opt"])
         self.sampler.load_state_dict(extra["sampler"])
         self.step = step
         return True
@@ -89,47 +372,33 @@ class Trainer:
     # -- training -------------------------------------------------------------
     def run(self, steps: Optional[int] = None, log_every: int = 200):
         steps = steps if steps is not None else self.cfg.steps
-        losses = []
-        t0 = time.time()
-        while self.step < steps:
-            u, p, n = self.sampler.next_batch()
-            batch = {"user": jnp.asarray(u), "pos": jnp.asarray(p),
-                     "neg": jnp.asarray(n)}
-            self.params, self.opt_state, loss = self._train_step(
-                self.params, self.opt_state, batch)
-            self.step += 1
-            losses.append(float(loss))
-            if self.ckpt is not None:
-                self.ckpt.maybe_save(self.step, self._state_tree(),
-                                     extra={"sampler":
-                                            self.sampler.state_dict()})
-            if log_every and self.step % log_every == 0:
-                print(f"  step {self.step}: loss="
-                      f"{np.mean(losses[-log_every:]):.4f} "
-                      f"({time.time()-t0:.1f}s)")
-        if self.ckpt is not None:
-            self.ckpt.maybe_save(self.step, self._state_tree(),
-                                 extra={"sampler": self.sampler.state_dict()},
-                                 force=True)
+        losses = self.backend.run(self, steps, log_every)
+        self._maybe_checkpoint(force=True)
         return losses
 
     # -- evaluation -------------------------------------------------------------
     def evaluate(self, test_edges, k: Optional[int] = None,
-                 max_users: int = 4096):
+                 max_users: int = 4096, item_block: Optional[int] = None):
+        """Streaming Recall/NDCG@k: items are scored in blocks with an
+        on-device running top-k and on-device masking of training
+        interactions — the O(users x items) score matrix never
+        materializes (host or device)."""
         k = k or self.cfg.eval_k
         tu, ti = test_edges
-        users = np.unique(tu)
+        users = np.unique(np.asarray(tu))
         if users.size > max_users:
-            users = np.random.default_rng(0).choice(users, max_users,
-                                                    replace=False)
-        scores = np.asarray(L.score_all_items(
-            self.params, self.statics, self.mcfg, jnp.asarray(users)))
-        # mask training interactions
-        row_of_user = {int(u): r for r, u in enumerate(users)}
+            users = np.sort(np.random.default_rng(0).choice(
+                users, max_users, replace=False))
+        u_eval, v_all = L.eval_embeddings(self.params, self.statics,
+                                          self.mcfg, jnp.asarray(users))
+        # training interactions of the eval users, as (row, item) pairs
+        # (int dtypes even when empty: searchsorted on sorted uniques)
         eu, ev = self.graph.edge_u, self.graph.edge_v
         keep = np.isin(eu, users)
-        rows = np.asarray([row_of_user[int(u)] for u in eu[keep]])
-        topk = topk_from_scores(scores, k, exclude=(rows, ev[keep]))
+        rows = np.searchsorted(users, eu[keep]).astype(np.int32)
+        topk = topk_streaming(u_eval, v_all, k,
+                              block=item_block or self.cfg.eval_item_block,
+                              exclude=(rows, ev[keep].astype(np.int32)))
         return recall_ndcg_at_k(topk, tu, ti, users, k=k)
 
     def n_params(self) -> int:
@@ -139,9 +408,11 @@ class Trainer:
     # -- deployment -----------------------------------------------------------
     def export(self, directory: Optional[str] = None):
         """Snapshot this run into a deployable CompressedArtifact (sketch
-        indices + codebooks + config + provenance); saves atomically when
-        `directory` is given. The compress-once/serve-many handoff:
-        serving loads the artifact instead of re-clustering/retraining."""
+        indices + trained codebooks + model config + provenance); saves
+        atomically when `directory` is given. Works from any trainer
+        backend — params are gathered to host whatever mesh they trained
+        on. The compress-once/serve-many handoff: serving loads the
+        artifact instead of re-clustering/retraining."""
         from repro.serve import CompressedArtifact
         artifact = CompressedArtifact.from_trainer(self)
         if directory is not None:

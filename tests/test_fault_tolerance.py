@@ -21,9 +21,10 @@ def dataset():
 
 
 def _losses_to_params(graph, sketch, steps, ckpt_dir=None, resume=False,
-                      interrupt_at=None):
+                      interrupt_at=None, backend=None):
     cfg = TrainConfig(dim=16, steps=steps, batch_size=512, lr=5e-3,
-                      ckpt_dir=ckpt_dir, ckpt_every=10)
+                      ckpt_dir=ckpt_dir, ckpt_every=10, backend=backend,
+                      chunk_size=8)
     tr = Trainer(graph, sketch, cfg)
     if resume:
         assert tr.maybe_resume()
@@ -31,18 +32,20 @@ def _losses_to_params(graph, sketch, steps, ckpt_dir=None, resume=False,
     return tr
 
 
-def test_kill_and_resume_bitwise_identical(dataset, tmp_path):
+@pytest.mark.parametrize("backend", [None, "fused"])
+def test_kill_and_resume_bitwise_identical(dataset, tmp_path, backend):
     g, _, _, train, _ = dataset
     sketch = baco_build(train, d=16, ratio=0.3)
     # uninterrupted run
-    t_ref = _losses_to_params(train, sketch, steps=40)
+    t_ref = _losses_to_params(train, sketch, steps=40, backend=backend)
     # interrupted at step 20 (checkpoint every 10), then a fresh process
     # (new Trainer) resumes from disk
     ck = str(tmp_path / "ck")
-    _losses_to_params(train, sketch, steps=40, ckpt_dir=ck, interrupt_at=20)
+    _losses_to_params(train, sketch, steps=40, ckpt_dir=ck, interrupt_at=20,
+                      backend=backend)
     assert latest_step(ck) == 20
     t_res = _losses_to_params(train, sketch, steps=40, ckpt_dir=ck,
-                              resume=True)
+                              resume=True, backend=backend)
     for a, b in zip(jax.tree.leaves(t_ref.params),
                     jax.tree.leaves(t_res.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

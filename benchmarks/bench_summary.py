@@ -1,0 +1,106 @@
+"""Merge every BENCH_*.json perf record into one trajectory table.
+
+Each benchmark in this repo emits a machine-readable record
+(BENCH_serve.json, BENCH_cluster.json, BENCH_train.json,
+BENCH_stream.json, ...). CI uploads them side by side; this tool is the
+one place they are read together — the printed table is the repo's perf
+trajectory at a glance, and `--json` re-emits the merged record for
+downstream tooling.
+
+    python benchmarks/bench_summary.py [--dir .] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    return str(v)
+
+
+def _headline(name: str, rec: dict) -> list:
+    """(metric, value) pairs worth a trajectory line, per bench kind."""
+    kind = rec.get("bench", name)
+    if kind == "serve_session":
+        rows = [r for r in rec.get("records", []) if "p50_ms" in r]
+        if not rows:
+            return []
+        best = min(rows, key=lambda r: r["p50_ms"])
+        return [("best p50_ms", best["p50_ms"]),
+                ("backend", best.get("backend", "?")),
+                ("buckets", len(rec.get("buckets", []))),
+                ("max compiles", max(r.get("compiles", 0) for r in rows))]
+    if kind == "cluster_solve":
+        rows = [r for r in rec.get("records", []) if isinstance(r, dict)]
+        out = [("records", len(rows))]
+        sp = [r["speedup_vs_seed"] for r in rows
+              if isinstance(r.get("speedup_vs_seed"), (int, float))]
+        if sp:
+            out.append(("best speedup_vs_seed", max(sp)))
+        return out
+    if kind == "train_pipeline":
+        rows = [r for r in rec.get("records", []) if isinstance(r, dict)]
+        out = [("records", len(rows))]
+        sp = [r["speedup_vs_seed"] for r in rows
+              if isinstance(r.get("speedup_vs_seed"), (int, float))]
+        if sp:
+            out.append(("best speedup_vs_seed", max(sp)))
+        return out
+    if kind == "stream":
+        keys = ("cold_assign_p50_ms", "swap_p99_ms",
+                "refresh_steady_frac_of_full", "recall_frozen",
+                "recall_stream", "recall_full", "recall_gap_recovered",
+                "compiles")
+        return [(k, rec[k]) for k in keys if k in rec]
+    # unknown bench kind: surface its scalar fields
+    return [(k, v) for k, v in rec.items()
+            if isinstance(v, (int, float, str)) and k != "bench"][:6]
+
+
+def summarize(directory: str = ".") -> dict:
+    merged = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        try:
+            with open(path) as f:
+                merged[name] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            merged[name] = {"error": str(e)}
+    return merged
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json records")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the merged record instead of the table")
+    args = ap.parse_args(argv)
+    merged = summarize(args.dir)
+    if args.json:
+        print(json.dumps(merged, indent=2))
+        return 0
+    if not merged:
+        print(f"no BENCH_*.json records under {args.dir!r}")
+        return 1
+    width = max(len(n) for n in merged)
+    print(f"{'record':<{width}}  platform  headline metrics")
+    print("-" * 72)
+    for name, rec in merged.items():
+        if "error" in rec:
+            print(f"{name:<{width}}  -         unreadable: {rec['error']}")
+            continue
+        platform = rec.get("platform", "-")
+        pairs = "  ".join(f"{k}={_fmt(v)}" for k, v in _headline(name, rec))
+        print(f"{name:<{width}}  {platform:<8}  {pairs}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

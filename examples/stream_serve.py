@@ -1,0 +1,86 @@
+"""Streaming example: serve through arrivals, drift and hot swaps.
+
+A live recommender never stops: new users and items keep arriving and
+tastes migrate. This demo bootstraps a compressed model on the warm
+prefix of a drifting interaction stream, then replays the stream —
+append -> cold-assign -> periodic warm refresh + fine-tune -> publish a
+DELTA -> hot-swap the serving session between requests — and shows that
+
+  * a brand-new user (unknown at bootstrap) gets served top-k
+    immediately after the swap that introduces them,
+  * the session compiles ZERO new XLA programs across every swap
+    (capacity-ladder padding), and
+  * state crosses the "wire" as verified artifact deltas, not bundles.
+
+Run:  PYTHONPATH=src python examples/stream_serve.py [--steps N]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import ClusterEngine
+from repro.data import drifting_coclusters
+from repro.stream import ReplayConfig, StreamUpdater, replay
+from repro.training import Trainer, TrainConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=120,
+                    help="bootstrap BPR steps")
+    ap.add_argument("--tune-steps", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    stream = drifting_coclusters(600, 480, k_true=16, avg_deg=9, T=3,
+                                 drift=0.1, seed=0)
+    print(f"warm prefix {stream.n_warm_users}x{stream.n_warm_items} "
+          f"({stream.base.n_edges} edges), 3 arrival waves to "
+          f"{stream.n_users}x{stream.n_items}")
+
+    # --- bootstrap: cluster + train the warm prefix, open the session ---
+    sketch = ClusterEngine().build(stream.base, d=args.dim, ratio=0.25)
+    tr = Trainer(stream.base, sketch,
+                 TrainConfig(dim=args.dim, steps=args.steps,
+                             batch_size=1024, lr=5e-3))
+    tr.run(log_every=0)
+    art = tr.export()
+    # capacity rungs sized for the END of the stream: user/item/edge
+    # totals are known, and codebook rows only grow (stable row maps),
+    # bounded by the entity counts — so swaps never have to recompile
+    caps = {"n_users": stream.n_users, "n_items": stream.n_items,
+            "k_users": stream.n_users // 2, "k_items": stream.n_items // 2,
+            "n_edges": stream.base.n_edges
+            + sum(s.edge_u.size for s in stream.steps)}
+    session = art.session(k=10, capacity=caps)
+    session.warmup(4)
+    compiles_before = session.compile_count
+
+    # a user that does NOT exist yet — born in the first arrival wave
+    newcomer = stream.n_warm_users + 1
+
+    # --- replay the stream with hot swaps -------------------------------
+    updater = StreamUpdater.from_trainer(tr, capacity=caps)
+    report = replay(updater, stream.steps, session,
+                    ReplayConfig(refresh_every=2,
+                                 tune_steps=args.tune_steps,
+                                 requests_per_step=3, request_batch=4),
+                    log=print)
+
+    # --- the newcomer is served by the swapped-in state -----------------
+    vals, items = session(np.asarray([newcomer], np.int32))
+    tele = report["telemetry"]
+    print(f"newcomer user {newcomer}: top-3 items "
+          f"{np.asarray(items)[0, :3].tolist()}")
+    print(f"swaps={tele['swaps']} (p99 {tele['swap_p99_ms']}ms), "
+          f"refresh churn mean={tele['churn_mean']}, mean delta "
+          f"{report['delta_bytes_mean'] // 1024}KB")
+    assert session.compile_count == compiles_before + 1, \
+        "swaps must not compile (the +1 is the newcomer's batch=1 shape)"
+    print(f"compiles: {compiles_before} after warmup -> "
+          f"{session.compile_count} after {tele['swaps']} swaps + one new "
+          f"request shape — swaps compiled nothing")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,14 +55,14 @@ def _hash(ids: np.ndarray, k: int, seed: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 # hashing family
 # --------------------------------------------------------------------------
-def random_sketch(graph, budget, seed=0, **_):
+def random_sketch(graph, budget, seed=0):
     ku, kv = _split_budget(graph, budget)
     return Sketch(_hash(np.arange(graph.n_users), ku, seed)[:, None],
                   _hash(np.arange(graph.n_items), kv, seed + 1)[:, None],
                   ku, kv, method="random")
 
 
-def frequency_sketch(graph, budget, seed=0, **_):
+def frequency_sketch(graph, budget, seed=0):
     """Half the bins are private to the most frequent entities [16, 66]."""
     ku, kv = _split_budget(graph, budget)
 
@@ -82,7 +82,7 @@ def frequency_sketch(graph, budget, seed=0, **_):
                   ku, kv, method="frequency")
 
 
-def double_sketch(graph, budget, seed=0, **_):
+def double_sketch(graph, budget, seed=0):
     """Two independent hashes; embeddings summed (2-hot sketch) [66]."""
     ku, kv = _split_budget(graph, budget)
     u = np.stack([_hash(np.arange(graph.n_users), ku, seed),
@@ -92,7 +92,7 @@ def double_sketch(graph, budget, seed=0, **_):
     return Sketch(u, v, ku, kv, method="double")
 
 
-def hybrid_sketch(graph, budget, seed=0, **_):
+def hybrid_sketch(graph, budget, seed=0):
     """Frequent entities get private bins; the rest are double-hashed [66]."""
     ku, kv = _split_budget(graph, budget)
 
@@ -114,7 +114,7 @@ def hybrid_sketch(graph, budget, seed=0, **_):
                   ku, kv, method="hybrid")
 
 
-def lsh_sketch(graph, budget, seed=0, n_bits=16, **_):
+def lsh_sketch(graph, budget, seed=0, n_bits=16):
     """SimHash over interaction rows: sign(B @ R) bucketed mod K [10, 67]."""
     ku, kv = _split_budget(graph, budget)
     rng = np.random.default_rng(seed)
@@ -142,7 +142,7 @@ def lsh_sketch(graph, budget, seed=0, n_bits=16, **_):
 # --------------------------------------------------------------------------
 # graph clustering family
 # --------------------------------------------------------------------------
-def _lp_family(graph, budget, scheme, gamma, max_iters=8, **_):
+def _lp_family(graph, budget, scheme, gamma, max_iters=8):
     wu, wv = make_weights(graph, scheme)
     labels, it = solver_jax.lp_solve(graph, wu, wv, gamma, budget, max_iters)
     ku, ul = compact_labels(labels[:graph.n_users])
@@ -153,17 +153,18 @@ def _lp_family(graph, budget, scheme, gamma, max_iters=8, **_):
                         "joint_labels": labels.astype(np.int32)})
 
 
-def lp_sketch(graph, budget, **kw):
+def lp_sketch(graph, budget, seed=0, max_iters=8):
     """Plain LP [38]: gamma = 0, no balance control."""
-    return _lp_family(graph, budget, "cpm", 0.0, **kw)
+    return _lp_family(graph, budget, "cpm", 0.0, max_iters=max_iters)
 
 
-def lpab_sketch(graph, budget, gamma=1.0, **kw):
+def lpab_sketch(graph, budget, seed=0, gamma=1.0, max_iters=8):
     """LPAb [3]: LP solver with modularity weights."""
-    return _lp_family(graph, budget, "modularity", gamma, **kw)
+    return _lp_family(graph, budget, "modularity", gamma,
+                      max_iters=max_iters)
 
 
-def _louvain_family(graph, budget, scheme, gamma, **_):
+def _louvain_family(graph, budget, scheme, gamma):
     wu, wv = make_weights(graph, scheme)
     labels, lv = louvain_solve(graph, wu, wv, gamma)
     ku, ul = compact_labels(labels[:graph.n_users])
@@ -174,15 +175,15 @@ def _louvain_family(graph, budget, scheme, gamma, **_):
                         "joint_labels": labels.astype(np.int32)})
 
 
-def louvain_modularity_sketch(graph, budget, gamma=1.0, **kw):
+def louvain_modularity_sketch(graph, budget, seed=0, gamma=1.0):
     """GraphHash [56]: bipartite-modularity Louvain."""
-    return _louvain_family(graph, budget, "modularity", gamma, **kw)
+    return _louvain_family(graph, budget, "modularity", gamma)
 
 
-def louvain_cpm_sketch(graph, budget, gamma=None, **kw):
+def louvain_cpm_sketch(graph, budget, seed=0, gamma=None):
     if gamma is None:  # CPM gamma must sit at edge-density scale
         gamma = max(graph.n_edges / (graph.n_users * graph.n_items), 1e-9) * 4
-    return _louvain_family(graph, budget, "cpm", gamma, **kw)
+    return _louvain_family(graph, budget, "cpm", gamma)
 
 
 # --------------------------------------------------------------------------
@@ -216,7 +217,7 @@ def _kmeans(x, k, seed=0, iters=25):
     return assign
 
 
-def scc_sketch(graph, budget, seed=0, n_vecs=None, **_):
+def scc_sketch(graph, budget, seed=0, n_vecs=None):
     """Spectral co-clustering [12]: SVD of D_u^-1/2 B D_v^-1/2 + k-means."""
     import scipy.sparse as sp
     import scipy.sparse.linalg as spla
@@ -241,7 +242,7 @@ def scc_sketch(graph, budget, seed=0, n_vecs=None, **_):
                   meta={"joint_labels": joint.astype(np.int32)})
 
 
-def sbc_sketch(graph, budget, seed=0, **_):
+def sbc_sketch(graph, budget, seed=0):
     """Spectral biclustering [29]: per-side k-means on singular vectors."""
     import scipy.sparse as sp
     import scipy.sparse.linalg as spla
@@ -262,7 +263,7 @@ def sbc_sketch(graph, budget, seed=0, **_):
     return Sketch(ul[:, None], il[:, None], ku2, kv2, method="sbc")
 
 
-def leiden_like_sketch(graph, budget, gamma=1.0, **kw):
+def leiden_like_sketch(graph, budget, seed=0, gamma=1.0):
     """Leiden [48], approximated: Louvain levels + a refinement pass.
 
     Leiden's contribution over Louvain is a refinement phase that splits
@@ -285,7 +286,7 @@ def leiden_like_sketch(graph, budget, gamma=1.0, **kw):
                         "joint_labels": refined.astype(np.int32)})
 
 
-def itcc_sketch(graph, budget, seed=0, n_iters=12, **_):
+def itcc_sketch(graph, budget, seed=0, n_iters=12):
     """Information-theoretic co-clustering [13]: alternate row/column
     cluster updates minimizing the KL between p(u,v) and its co-cluster
     approximation. Dense p-matrix -> paper-scale graphs only."""
@@ -322,7 +323,7 @@ def itcc_sketch(graph, budget, seed=0, n_iters=12, **_):
     return Sketch(ul[:, None], il[:, None], ku2, kv2, method="itcc")
 
 
-def double_graphhash_sketch(graph, budget, gamma=1.0, **kw):
+def double_graphhash_sketch(graph, budget, seed=0, gamma=1.0):
     """DoubleGraphHash [56]: two clusterings at different resolutions,
     combined as a 2-hot sketch (the graph analogue of double hashing)."""
     wu, wv = make_weights(graph, "modularity")
@@ -338,9 +339,11 @@ def double_graphhash_sketch(graph, budget, gamma=1.0, **kw):
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
-def _baco(graph, budget, **kw):
+def _baco(graph, budget, seed=0, **kw):
+    # seed accepted for registry uniformity (BACO is deterministic);
+    # everything else must name a real baco_build parameter — its
+    # explicit signature is the typo guard
     from .baco import baco_build
-    kw.pop("seed", None)
     return baco_build(graph, budget=budget, **kw)
 
 
@@ -364,8 +367,42 @@ BASELINES = {
 }
 
 
+# kwargs a registry entry pins itself (callers may not override them)
+_PRESET_KWARGS = {"baco_no_scu": {"scu"}}
+
+
+def _allowed_kwargs(name: str) -> set:
+    """Keyword names the selected builder really accepts. The baco
+    variants forward to ``baco_build``, so its signature is the truth
+    for them (minus any kwarg the variant pins, e.g. baco_no_scu's
+    ``scu``); everything else is read off the builder itself."""
+    import inspect
+    if name.startswith("baco"):
+        from .baco import baco_build
+        target = baco_build
+    else:
+        target = BASELINES[name]
+    kinds = (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+             inspect.Parameter.KEYWORD_ONLY)
+    allowed = {p.name for p in inspect.signature(target).parameters.values()
+               if p.kind in kinds} - {"graph", "budget"}
+    allowed -= _PRESET_KWARGS.get(name, set())
+    return allowed | {"seed"}      # the registry always passes seed
+
+
 def build_sketch(name: str, graph: BipartiteGraph, budget: int,
                  seed: int = 0, **kw) -> Sketch:
+    """Build the named ETC sketch. Extra kwargs must name real
+    parameters of the selected builder: kwargs are validated against
+    the builder's explicit signature (no ``**_`` swallowing anywhere in
+    the zoo), so a typo'd ``gamm=...`` raises TypeError up front
+    instead of silently running defaults."""
     if name not in BASELINES:
         raise KeyError(f"unknown ETC method {name!r}: {sorted(BASELINES)}")
+    allowed = _allowed_kwargs(name)
+    unknown = sorted(set(kw) - allowed)
+    if unknown:
+        raise TypeError(f"build_sketch({name!r}): unexpected keyword "
+                        f"argument(s) {unknown}; valid kwargs: "
+                        f"{sorted(allowed)}")
     return BASELINES[name](graph, budget, seed=seed, **kw)

@@ -510,6 +510,9 @@ class ClusterEngine:
                 "joint_labels": np.asarray(labels, dtype=np.int32)}
         if scu:
             su = self.secondary_user_labels(graph, labels, wu, wv, gamma)
+            # raw (shared-id-space) secondary labels, for warm streaming
+            # updates (repro.stream) that must keep label->row maps stable
+            meta["secondary_labels"] = np.asarray(su, dtype=np.int32)
             ku, pu_c, su_c = compact_labels(pu, su)
             kv, pv_c = compact_labels(pv)
             return Sketch(np.stack([pu_c, su_c], axis=1), pv_c[:, None],

@@ -20,7 +20,18 @@ from typing import Iterable, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["BipartiteGraph"]
+__all__ = ["BipartiteGraph", "pad_rung"]
+
+
+def pad_rung(n: int, floor: int = 8) -> int:
+    """Next power-of-two >= n (>= floor): THE capacity-ladder rung used
+    everywhere shapes must stay stable while data grows — the padded
+    solver/cold-assign programs (core.solver_jax), the swap-capable
+    serving session (repro.serve), and the stream fine-tuner. One
+    definition, so the "one compiled program" invariants on every side
+    agree about where the rungs sit."""
+    n = max(int(n), 1)
+    return max(int(floor), 1 << (n - 1).bit_length())
 
 
 def _block_keys(n_users: int, n_items: int, edge_u, edge_v) -> np.ndarray:
@@ -36,6 +47,28 @@ def _block_keys(n_users: int, n_items: int, edge_u, edge_v) -> np.ndarray:
     return np.unique(eu * n_items + ev)
 
 
+def _fresh_mask(a: np.ndarray, b: np.ndarray,
+                ins: np.ndarray) -> np.ndarray:
+    """Which entries of sorted-unique ``b`` are absent from sorted-
+    unique ``a``, given ``ins = searchsorted(a, b)``."""
+    if a.size == 0:
+        return np.ones(b.shape, dtype=bool)
+    return (ins == a.size) | (a[np.minimum(ins, a.size - 1)] != b)
+
+
+def _merge_disjoint(a: np.ndarray, b: np.ndarray,
+                    ins: np.ndarray) -> np.ndarray:
+    """Merge sorted run ``a`` with sorted ``b`` DISJOINT from it, given
+    ``ins = searchsorted(a, b)`` — one pass, no re-search."""
+    out = np.empty(a.size + b.size, dtype=a.dtype if a.size else b.dtype)
+    pos = ins + np.arange(b.size)
+    mask = np.zeros(out.size, dtype=bool)
+    mask[pos] = True
+    out[mask] = b
+    out[~mask] = a
+    return out
+
+
 def _merge_unique(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Merge two SORTED UNIQUE int64 runs into one (no full re-sort:
     O(|a| + |b| log |a|) via searchsorted insertion positions)."""
@@ -44,15 +77,8 @@ def _merge_unique(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     if b.size == 0:
         return a
     ins = np.searchsorted(a, b)
-    fresh = (ins == a.size) | (a[np.minimum(ins, a.size - 1)] != b)
-    b = b[fresh]
-    out = np.empty(a.size + b.size, dtype=a.dtype)
-    pos = ins[fresh] + np.arange(b.size)
-    mask = np.zeros(out.size, dtype=bool)
-    mask[pos] = True
-    out[mask] = b
-    out[~mask] = a
-    return out
+    fresh = _fresh_mask(a, b, ins)
+    return _merge_disjoint(a, b[fresh], ins[fresh])
 
 
 @dataclasses.dataclass(frozen=True)

@@ -41,10 +41,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import BipartiteGraph
+from .graph import BipartiteGraph, pad_rung
 
 __all__ = ["lp_solve", "lp_solve_grid", "lp_solve_hostloop", "lp_step",
-           "count_side_labels", "solve_loop"]
+           "count_side_labels", "solve_loop", "lp_cold_assign",
+           "lp_solve_capped"]
 
 # plain float, not a device array: importing this module must never
 # initialize the jax backend (dryrun sets XLA_FLAGS first)
@@ -309,6 +310,187 @@ def lp_solve_grid(graph: BipartiteGraph, w_users, w_items, gammas,
         jnp.int32(0 if budget is None else budget), jnp.int32(max_iters),
         n_users=graph.n_users, n_items=graph.n_items)
     return np.asarray(labels), np.asarray(iters)
+
+
+# ---------------------------------------------------------------------------
+# capacity-padded solve: one compiled program across a growing graph
+# ---------------------------------------------------------------------------
+def lp_solve_capped(graph: BipartiteGraph, w_users, w_items, gamma: float,
+                    budget: int | None = None, max_iters: int = 8,
+                    init_labels: np.ndarray | None = None,
+                    caps: dict | None = None) -> Tuple[np.ndarray, int]:
+    """``lp_solve`` over inputs padded to capacity rungs — so a stream
+    of growing graphs (repro.stream refreshes) reuses ONE compiled
+    while_loop program until a rung is outgrown, instead of retracing
+    on every growth.
+
+    The padding is exact, not approximate — real labels come out
+    BIT-FOR-BIT equal to the unpadded solve (tests/test_stream.py):
+
+      * pad users/items carry weight 0 and one shared pad label P
+        (the last padded id, above every real id): they are nobody's
+        neighbor, so no real node can ever see or adopt P;
+      * pad edges connect pad user <-> pad item, appended after both
+        sorted runs (ids are the largest, so sortedness holds); their
+        candidate label IS the pad nodes' own label, so pad nodes sit
+        at a fixed point and contribute weight-0 terms elsewhere;
+      * the budget early-exit counts P once per padded side, so the
+        on-device budget is compensated by exactly that much.
+
+    ``caps`` may fix {"n_users", "n_items", "n_edges"} rungs (values
+    are raised to at least the real sizes); None falls back to the
+    plain solve.
+    """
+    if caps is None:
+        return lp_solve(graph, w_users, w_items, gamma, budget, max_iters,
+                        init_labels=init_labels)
+    nu, nv, e = graph.n_users, graph.n_items, graph.n_edges
+    cu = _pad_rung(max(int(caps.get("n_users") or 0), nu))
+    cv = _pad_rung(max(int(caps.get("n_items") or 0), nv))
+    ce = _pad_rung(max(int(caps.get("n_edges") or 0), e, 1))
+    if (cu, cv, ce) == (nu, nv, e):
+        return lp_solve(graph, w_users, w_items, gamma, budget, max_iters,
+                        init_labels=init_labels)
+    if ce > e:        # pad edges need PAD endpoints on both sides — a
+        cu = cu if cu > nu else 2 * cu   # real endpoint would see the
+        cv = cv if cv > nv else 2 * cv   # pad label as a candidate
+    pad_label = cu + cv - 1
+
+    def pad1(a, size, fill, dtype):
+        out = np.full(size, fill, dtype)
+        out[:a.shape[0]] = a
+        return out
+
+    eu = pad1(graph.edge_u, ce, cu - 1, np.int32)
+    ev = pad1(graph.edge_v, ce, cv - 1, np.int32)
+    eu_byv = pad1(graph.edge_u[graph.perm_by_item], ce, cu - 1, np.int32)
+    ev_byv = pad1(graph.edge_v[graph.perm_by_item], ce, cv - 1, np.int32)
+    wu = pad1(np.asarray(w_users, np.float32), cu, 0, np.float32)
+    wv = pad1(np.asarray(w_items, np.float32), cv, 0, np.float32)
+    if init_labels is None:
+        init_u = np.arange(nu, dtype=np.int32)
+        init_v = np.arange(nu, nu + nv, dtype=np.int32)
+    else:
+        init = np.asarray(init_labels, np.int32)
+        init_u, init_v = init[:nu], init[nu:]
+    lab = np.full(cu + cv, pad_label, np.int32)
+    lab[:nu] = init_u
+    lab[cu:cu + nv] = init_v
+    pad_sides = int(cu > nu) + int(cv > nv)
+    budget_p = 0 if budget is None else int(budget) + pad_sides
+    labels, it = _solve_jit(
+        jnp.asarray(lab), jnp.asarray(eu), jnp.asarray(ev),
+        jnp.asarray(eu_byv), jnp.asarray(ev_byv), jnp.asarray(wu),
+        jnp.asarray(wv), jnp.float32(gamma), jnp.int32(budget_p),
+        jnp.int32(max_iters), n_users=cu, n_items=cv)
+    labels = np.asarray(labels)
+    return np.concatenate([labels[:nu], labels[cu:cu + nv]]), int(it)
+
+
+# ---------------------------------------------------------------------------
+# cold-start assignment: one half-step over only the new nodes' edges
+# ---------------------------------------------------------------------------
+# the shape ladder cold assigns and capped solves compile against,
+# mirroring BatchDispatcher's bucket idea — a replay stream of arbitrary
+# arrival sizes compiles O(log^2) programs, not one per shape
+_pad_rung = pad_rung
+
+
+@functools.partial(jax.jit, static_argnames=("n_side", "n_labels"))
+def _cold_half_jit(node, cand_idx, opp_labels, w_self, w_opp, own, gamma,
+                   *, n_side: int, n_labels: int):
+    """One padded half-step for the cold nodes of one side: the cluster
+    weight totals (volume-balance term) are computed over ALL
+    opposite-side nodes, but the sort/scan passes only run over the cold
+    nodes' incident edges."""
+    w_by_label = jax.ops.segment_sum(w_opp, opp_labels,
+                                     num_segments=n_labels)
+    return _half_step(node, opp_labels[cand_idx], w_self, w_by_label, own,
+                      gamma, n_side, n_labels)
+
+
+def _cold_side(node_tail, opp_tail, opp_labels, w_self_side, own_side,
+               w_opp_full, gamma, n_new: int, n_labels: int) -> np.ndarray:
+    """Pad one side's cold tail onto the shape ladder and run the
+    half-step. node_tail is 0-based over the n_new cold nodes and sorted
+    (the cold nodes are an index-suffix, so their edges are a contiguous
+    tail of the corresponding sorted edge orientation). Pad edges hang
+    off a phantom node (id n_pad), so real rows are untouched. The
+    opposite-side arrays and the label space ride the ladder too — a
+    growing replay stream would otherwise recompile on every ``grow``.
+    """
+    n_pad = _pad_rung(n_new)
+    e_pad = _pad_rung(node_tail.size)
+    node = np.full(e_pad, n_pad, np.int32)
+    node[:node_tail.size] = node_tail
+    cand = np.zeros(e_pad, np.int32)
+    cand[:opp_tail.size] = opp_tail
+    w_self = np.zeros(n_pad + 1, np.float32)
+    w_self[:n_new] = w_self_side
+    own = np.zeros(n_pad + 1, np.int32)
+    own[:n_new] = own_side
+    opp_pad = _pad_rung(opp_labels.size)
+    opp_lab = np.zeros(opp_pad, np.int32)           # pad label 0 ...
+    opp_lab[:opp_labels.size] = opp_labels
+    w_opp = np.zeros(opp_pad, np.float32)           # ... carries 0 weight
+    w_opp[:w_opp_full.size] = w_opp_full
+    out = _cold_half_jit(jnp.asarray(node), jnp.asarray(cand),
+                         jnp.asarray(opp_lab), jnp.asarray(w_self),
+                         jnp.asarray(w_opp), jnp.asarray(own),
+                         jnp.float32(gamma), n_side=n_pad + 1,
+                         n_labels=_pad_rung(n_labels))
+    return np.asarray(out)[:n_new]
+
+
+def lp_cold_assign(graph: BipartiteGraph, labels, w_users, w_items,
+                   gamma: float, n_new_users: int = 0,
+                   n_new_items: int = 0) -> np.ndarray:
+    """Place brand-new users/items (index suffixes of their sides) into
+    the existing partition with ONE device-resident LP half-step each,
+    over only their incident edges.
+
+    The score is exactly Eq. 13/14 — neighbor-label counts minus the
+    gamma-weighted opposite-side cluster volume — so the balance term is
+    retained: without it every cold node would fall into the hottest
+    cluster touching any of its neighbors. A cold node whose best
+    candidate scores no better than staying alone keeps its (fresh
+    singleton) label, i.e. it may legitimately found a new cluster that
+    the next ``refresh`` consolidates.
+
+    ``labels`` must already be grown to the new node universe, with the
+    cold nodes holding fresh unique labels (``grow_labels``). Users are
+    assigned first (item labels fixed), then items see the updated user
+    labels — the same alternation order as a solver sweep. Inputs are
+    padded onto a power-of-two shape ladder so replay streams of
+    arbitrary arrival sizes compile a bounded set of programs. Returns
+    the updated labels (host int32[n_nodes]); old nodes never move.
+    """
+    nu, nv, n = graph.n_users, graph.n_items, graph.n_nodes
+    lab = np.array(labels, dtype=np.int32, copy=True)
+    if lab.shape[0] != n:
+        raise ValueError(f"labels must cover the grown universe: "
+                         f"{lab.shape[0]} != {n} nodes")
+    if not (0 <= n_new_users <= nu and 0 <= n_new_items <= nv):
+        raise ValueError("n_new_users/n_new_items out of range")
+    if n_new_users == 0 and n_new_items == 0:
+        return lab
+    wu = np.asarray(w_users, np.float32)
+    wv = np.asarray(w_items, np.float32)
+    if n_new_users:
+        u0 = nu - n_new_users
+        lo = int(np.searchsorted(graph.edge_u, u0))
+        lab[u0:nu] = _cold_side(
+            (graph.edge_u[lo:] - u0).astype(np.int32), graph.edge_v[lo:],
+            lab[nu:], wu[u0:], lab[u0:nu], wv, gamma, n_new_users, n)
+    if n_new_items:
+        v0 = nv - n_new_items
+        ev_byv = graph.edge_v[graph.perm_by_item]
+        eu_byv = graph.edge_u[graph.perm_by_item]
+        lo = int(np.searchsorted(ev_byv, v0))
+        lab[nu + v0:] = _cold_side(
+            (ev_byv[lo:] - v0).astype(np.int32), eu_byv[lo:],
+            lab[:nu], wv[v0:], lab[nu + v0:], wu, gamma, n_new_items, n)
+    return lab
 
 
 def lp_solve_hostloop(graph: BipartiteGraph, w_users, w_items, gamma: float,

@@ -1,8 +1,10 @@
 from .synthetic import (synthetic_bipartite, planted_coclusters,
-                        paperlike_dataset, DATASET_PRESETS)
+                        paperlike_dataset, drifting_coclusters,
+                        DriftStream, StreamStep, DATASET_PRESETS)
 from .sampler import (BPRSampler, DeviceBPRSampler, make_sampler,
                       available_samplers)
 
 __all__ = ["synthetic_bipartite", "planted_coclusters", "paperlike_dataset",
+           "drifting_coclusters", "DriftStream", "StreamStep",
            "DATASET_PRESETS", "BPRSampler", "DeviceBPRSampler",
            "make_sampler", "available_samplers"]

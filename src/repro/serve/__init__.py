@@ -37,11 +37,13 @@ Usage — train, export, deploy, serve::
 CLI: ``python -m repro.launch.serve [--artifact DIR] [--backend ...]``.
 Bench: ``python benchmarks/serve_bench.py --json``.
 """
-from .artifact import ARTIFACT_VERSION, CompressedArtifact
+from .artifact import (ARTIFACT_VERSION, DELTA_VERSION, ArtifactDelta,
+                       CompressedArtifact)
 from .dispatch import DEFAULT_BUCKETS, BatchDispatcher
-from .session import ArchSession, RecsysSession, Session
-from .telemetry import LatencyRecorder
+from .session import ArchSession, RecsysSession, Session, capacity_plan
+from .telemetry import LatencyRecorder, StreamTelemetry
 
-__all__ = ["ARTIFACT_VERSION", "CompressedArtifact", "DEFAULT_BUCKETS",
-           "BatchDispatcher", "Session", "RecsysSession", "ArchSession",
-           "LatencyRecorder"]
+__all__ = ["ARTIFACT_VERSION", "DELTA_VERSION", "ArtifactDelta",
+           "CompressedArtifact", "DEFAULT_BUCKETS", "BatchDispatcher",
+           "Session", "RecsysSession", "ArchSession", "LatencyRecorder",
+           "StreamTelemetry", "capacity_plan"]

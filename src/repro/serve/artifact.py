@@ -12,21 +12,35 @@ Layout of `save(dir)`:
 
     <dir>/manifest.json   version, model config, provenance (JSON)
     <dir>/arrays.npz      params/*, edges/*, sketch/* (flattened paths)
+
+Streaming deployments ship *deltas* instead of whole bundles:
+``new.delta(base)`` captures only the arrays that changed between two
+artifact versions (content-addressed: every artifact has a
+``content_id()`` digest over its arrays + model config), and
+``base.apply_delta(d)`` reconstructs ``new`` bit-for-bit, verifying
+both the base and the result digests. ``ArtifactDelta.save``/``load``
+ride the same atomic bundle layer with their own versioned manifest.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import hashlib
+import json
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.sketch import Sketch
-from repro.training.checkpoint import read_bundle, write_bundle
+from repro.training.checkpoint import (_flatten_with_paths,
+                                       _unflatten_paths, read_bundle,
+                                       write_bundle)
 
-__all__ = ["CompressedArtifact", "ARTIFACT_VERSION"]
+__all__ = ["CompressedArtifact", "ArtifactDelta", "ARTIFACT_VERSION",
+           "DELTA_VERSION"]
 
 ARTIFACT_VERSION = 1
+DELTA_VERSION = 1
 
 # the model-config keys an artifact must carry to rebuild a LightGCNConfig
 _MODEL_KEYS = ("n_users", "n_items", "dim", "n_layers", "l2",
@@ -104,14 +118,105 @@ class CompressedArtifact:
             statics["sketch_v"] = self.sketch.item_idx
         return statics
 
-    def session(self, k: int = 20, backend: Optional[str] = None):
-        """Convenience: a warmed-up-able RecsysSession over this bundle."""
+    def session(self, k: int = 20, backend: Optional[str] = None,
+                capacity=None, telemetry=None):
+        """Convenience: a warmed-up-able RecsysSession over this bundle.
+        Pass ``capacity`` ("auto" or a maxima dict) for a hot-swappable
+        session padded to the capacity ladder."""
         from repro.serve.session import RecsysSession
-        return RecsysSession.from_artifact(self, k=k, backend=backend)
+        return RecsysSession.from_artifact(self, k=k, backend=backend,
+                                           capacity=capacity,
+                                           telemetry=telemetry)
 
     def n_params(self) -> int:
         return sum(int(np.prod(p.shape)) for p in
                    jax.tree.leaves(self.params))
+
+    # -- content addressing / deltas ----------------------------------------
+    def _tree(self) -> dict:
+        tree = {"params": self.params, "edges": self.edges}
+        if self.sketch is not None:
+            tree["sketch"] = self.sketch.state_arrays()
+        return tree
+
+    def _flat(self) -> dict:
+        flat, _ = _flatten_with_paths(self._tree())
+        return flat
+
+    def content_id(self) -> str:
+        """Stable digest of every array (bytes + dtype + shape) and the
+        model config — the identity `delta`/`apply_delta` key on.
+        Memoized on the (frozen, arrays-are-immutable) instance: a
+        replay publication hashes each artifact once, not once per
+        delta/apply step."""
+        cached = self.__dict__.get("_content_id")
+        if cached is not None:
+            return cached
+        h = hashlib.sha256()
+        flat = self._flat()
+        for key in sorted(flat):
+            arr = np.ascontiguousarray(flat[key])
+            h.update(key.encode())
+            h.update(str(arr.dtype).encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        h.update(json.dumps(self.model, sort_keys=True).encode())
+        digest = h.hexdigest()[:16]
+        object.__setattr__(self, "_content_id", digest)
+        return digest
+
+    def delta(self, base: "CompressedArtifact") -> "ArtifactDelta":
+        """The versioned delta bundle that turns `base` into `self`:
+        only arrays that changed (or are new) are carried; arrays that
+        disappeared are listed by path. Apply with
+        ``base.apply_delta(delta)``."""
+        old = base._flat()
+        new = self._flat()
+        changed = {}
+        for key, arr in new.items():
+            prev = old.get(key)
+            if (prev is None or prev.shape != arr.shape
+                    or prev.dtype != arr.dtype
+                    or not np.array_equal(prev, arr)):
+                changed[key] = arr
+        removed = tuple(sorted(set(old) - set(new)))
+        return ArtifactDelta(base_id=base.content_id(),
+                             new_id=self.content_id(), changed=changed,
+                             removed=removed, model=dict(self.model),
+                             provenance=dict(self.provenance))
+
+    def apply_delta(self, delta: "ArtifactDelta") -> "CompressedArtifact":
+        """Reconstruct the delta's target artifact from this base.
+
+        Verifies the base digest before and the target digest after —
+        a delta applied to the wrong base, or corrupted in transit,
+        fails loudly instead of serving a chimera."""
+        have = self.content_id()
+        if delta.base_id != have:
+            raise ValueError(
+                f"delta expects base {delta.base_id}, artifact is {have} "
+                f"(deltas must be applied in publication order)")
+        flat = self._flat()
+        for key in delta.removed:
+            flat.pop(key, None)
+        flat.update(delta.changed)
+        tree = _unflatten_paths(flat)
+        model = dict(delta.model)
+        sketch = None
+        if "sketch" in tree:
+            sketch = Sketch.from_state(
+                tree["sketch"], k_users=model["k_users"],
+                k_items=model["k_items"],
+                method=delta.provenance.get("method", "unknown"),
+                meta=dict(delta.provenance))
+        out = CompressedArtifact(params=tree["params"], edges=tree["edges"],
+                                 sketch=sketch, model=model,
+                                 provenance=dict(delta.provenance))
+        got = out.content_id()
+        if got != delta.new_id:
+            raise ValueError(f"delta application produced {got}, "
+                             f"expected {delta.new_id} (corrupt delta?)")
+        return out
 
     # -- persistence --------------------------------------------------------
     def save(self, directory: str) -> str:
@@ -119,12 +224,9 @@ class CompressedArtifact:
         import os
         directory = os.path.normpath(directory)
         parent, name = os.path.split(directory)
-        tree = {"params": self.params, "edges": self.edges}
-        if self.sketch is not None:
-            tree["sketch"] = self.sketch.state_arrays()
         manifest = {"artifact_version": ARTIFACT_VERSION,
                     "model": self.model, "provenance": self.provenance}
-        return write_bundle(parent or ".", name, tree, manifest)
+        return write_bundle(parent or ".", name, self._tree(), manifest)
 
     @classmethod
     def load(cls, directory: str) -> "CompressedArtifact":
@@ -151,3 +253,54 @@ class CompressedArtifact:
         return cls(params=tree["params"], edges=tree["edges"],
                    sketch=sketch, model=dict(model),
                    provenance=dict(provenance))
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactDelta:
+    """A versioned artifact-to-artifact patch (see
+    ``CompressedArtifact.delta``). ``changed`` maps flattened array
+    paths (``params/user_table``, ``sketch/user_idx``, ...) to their
+    new values; ``removed`` lists paths that no longer exist. The pair
+    (base_id, new_id) makes application order-safe and verifiable."""
+
+    base_id: str
+    new_id: str
+    changed: dict
+    removed: Tuple[str, ...]
+    model: dict
+    provenance: dict
+
+    def nbytes(self) -> int:
+        """Payload size — the reason to ship deltas, not bundles."""
+        return int(sum(np.asarray(a).nbytes for a in self.changed.values()))
+
+    def save(self, directory: str) -> str:
+        """Atomically publish the delta bundle at `directory`."""
+        import os
+        directory = os.path.normpath(directory)
+        parent, name = os.path.split(directory)
+        manifest = {"delta_version": DELTA_VERSION,
+                    "base_id": self.base_id, "new_id": self.new_id,
+                    "removed": list(self.removed), "model": self.model,
+                    "provenance": self.provenance}
+        # flat path keys ARE the payload layout; write_bundle re-flattens
+        # the nested view so load() round-trips through _unflatten_paths
+        return write_bundle(parent or ".", name,
+                            _unflatten_paths(dict(self.changed)), manifest)
+
+    @classmethod
+    def load(cls, directory: str) -> "ArtifactDelta":
+        tree, manifest = read_bundle(directory)
+        version = manifest.get("delta_version")
+        if version is None:
+            raise ValueError(f"{directory!r} is a bundle but not an "
+                             f"ArtifactDelta (no delta_version)")
+        if version != DELTA_VERSION:
+            raise ValueError(f"unsupported delta version {version} at "
+                             f"{directory!r} (this build reads "
+                             f"{DELTA_VERSION})")
+        flat, _ = _flatten_with_paths(tree)
+        return cls(base_id=manifest["base_id"], new_id=manifest["new_id"],
+                   changed=flat, removed=tuple(manifest.get("removed", ())),
+                   model=dict(manifest["model"]),
+                   provenance=dict(manifest.get("provenance", {})))

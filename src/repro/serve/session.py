@@ -27,11 +27,108 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.graph import pad_rung as _cap_rung
 from repro.embedding import normalize_backend
-from repro.serve.telemetry import LatencyRecorder, compile_count
+from repro.serve.telemetry import (LatencyRecorder, StreamTelemetry,
+                                   compile_count)
 
-__all__ = ["Session", "RecsysSession", "ArchSession"]
+__all__ = ["Session", "RecsysSession", "ArchSession", "capacity_plan"]
+
+
+# ---------------------------------------------------------------------------
+# capacity ladder: pad device state so hot swaps never change shapes
+# ---------------------------------------------------------------------------
+_CAP_KEYS = ("n_users", "n_items", "k_users", "k_items", "n_edges")
+
+
+# _cap_rung (= repro.core.graph.pad_rung) is the capacity ladder rung —
+# BatchDispatcher's bucket idea on the MODEL side: any state whose true
+# sizes fit under the current rungs compiles zero new XLA programs when
+# swapped in. Shared with the padded solver programs so both sides
+# agree where the rungs sit.
+
+
+def capacity_plan(mcfg, statics, **maxima) -> dict:
+    """Capacity rungs covering the given state plus caller headroom.
+
+    ``maxima`` may name any of n_users/n_items/k_users/k_items/n_edges
+    with the largest value the deployment expects (e.g. the end of a
+    replay stream); each capacity is the ladder rung covering
+    max(current, requested).
+    """
+    need = {"n_users": mcfg.n_users, "n_items": mcfg.n_items,
+            "k_users": mcfg.k_users or 0, "k_items": mcfg.k_items or 0,
+            "n_edges": int(np.asarray(statics["edge_u"]).shape[0])}
+    unknown = set(maxima) - set(_CAP_KEYS)
+    if unknown:
+        raise ValueError(f"unknown capacity keys {sorted(unknown)}; "
+                         f"expected {_CAP_KEYS}")
+    return {key: _cap_rung(max(need[key], int(maxima.get(key) or 0)))
+            for key in _CAP_KEYS}
+
+
+def _pad_rows(a, rows: int, fill=0):
+    a = np.asarray(a)
+    if a.shape[0] > rows:
+        raise ValueError(f"state of {a.shape[0]} rows exceeds capacity "
+                         f"{rows}")
+    out = np.full((rows,) + a.shape[1:], fill, dtype=a.dtype)
+    out[:a.shape[0]] = a
+    return out
+
+
+def _pad_state(params, statics, mcfg, caps: dict):
+    """Pad (params, statics, mcfg) up to the capacity rungs.
+
+    Correctness of the padding, piece by piece:
+      * pad codebook/table rows are zero and unreferenced;
+      * pad sketch rows point at row 0 — only queried if a caller asks
+        for a user id beyond the artifact's true count;
+      * pad edges hang off the LAST capacity user/item with edge_norm
+        0, appended after the real (sorted) runs — so both sorted
+        orientations stay sorted and every segment sum they touch adds
+        exactly 0;
+      * ``item_mask`` carries -inf for item slots beyond the true item
+        count: scores see ``+ mask``, so pad items can never enter a
+        top-k (this is data, not shape — it swaps with the state).
+    """
+    nu, nv = mcfg.n_users, mcfg.n_items
+    cu, cv, ce = caps["n_users"], caps["n_items"], caps["n_edges"]
+    p = {k: np.asarray(v) for k, v in params.items()}
+    s = {k: np.asarray(v) for k, v in statics.items()}
+    compressed = mcfg.k_users is not None
+    out_p = {
+        "user_table": _pad_rows(p["user_table"],
+                                caps["k_users"] if compressed else cu),
+        "item_table": _pad_rows(p["item_table"],
+                                caps["k_items"] if compressed else cv),
+    }
+    e = int(s["edge_u"].shape[0])
+    out_s = {
+        "edge_u": _pad_rows(s["edge_u"], ce, cu - 1),
+        "edge_v": _pad_rows(s["edge_v"], ce, cv - 1),
+        "edge_norm": _pad_rows(s["edge_norm"], ce, 0),
+        "edge_u_byitem": _pad_rows(s["edge_u_byitem"], ce, cu - 1),
+        "edge_norm_byitem": _pad_rows(s["edge_norm_byitem"], ce, 0),
+    }
+    for name, n_real, cap in (("indptr_u", nu, cu), ("indptr_v", nv, cv)):
+        ip = np.full(cap + 1, e, dtype=s[name].dtype)
+        ip[:n_real + 1] = s[name]
+        ip[-1] = ce                       # pad edges belong to the last slot
+        out_s[name] = ip
+    if "sketch_u" in s:
+        out_s["sketch_u"] = _pad_rows(s["sketch_u"], cu)
+        out_s["sketch_v"] = _pad_rows(s["sketch_v"], cv)
+    mask = np.zeros(cv, np.float32)
+    mask[nv:] = -np.inf
+    out_s["item_mask"] = mask
+    mcfg2 = dataclasses.replace(
+        mcfg, n_users=cu, n_items=cv,
+        k_users=caps["k_users"] if compressed else None,
+        k_items=caps["k_items"] if compressed else None)
+    return out_p, out_s, mcfg2
 
 
 class Session:
@@ -60,39 +157,111 @@ class RecsysSession(Session):
     BatchDispatcher, which pads to a fixed bucket ladder. (The int32
     request ids cannot alias the float top-k outputs, so nothing is
     donated here; the donation win lives in ArchSession's decode path.)
+
+    Streaming deployments construct the session with ``capacity`` — the
+    model-side analogue of the dispatcher's bucket ladder: params and
+    statics are padded up to power-of-two capacity rungs
+    (``capacity_plan``), so ``swap(artifact)`` can atomically switch the
+    codebook/sketch/edge device arrays between requests with ZERO new
+    XLA compiles as long as the new state fits under the rungs. A swap
+    that outgrows a rung bumps the ladder (one recompile, counted in
+    telemetry) instead of failing.
     """
 
     def __init__(self, params, statics, mcfg, k: int = 20,
-                 backend: Optional[str] = None):
-        from repro.models import lightgcn as L
+                 backend: Optional[str] = None, capacity=None,
+                 telemetry: Optional[StreamTelemetry] = None):
         if backend is not None:
             mcfg = dataclasses.replace(
                 mcfg, lookup_backend=normalize_backend(backend))
         else:
             normalize_backend(mcfg.lookup_backend)   # validate early
-        self.mcfg = mcfg
         self.k = int(k)
-        self.params = jax.device_put(
-            jax.tree.map(jnp.asarray, params))
-        self.statics = jax.device_put(
-            jax.tree.map(jnp.asarray, statics))
-
-        def score_topk(params, statics, user_ids):
-            scores = L.score_all_items(params, statics, mcfg, user_ids)
-            return jax.lax.top_k(scores, self.k)
-
-        self._fn = jax.jit(score_topk)
         self._lat = LatencyRecorder()
+        self._stream = telemetry or StreamTelemetry()
+        self._compiles_base = 0
         self._shapes = set()
+        self._fn = None
+        self.mcfg = None
+        self._caps = None
+        if capacity is not None:
+            if capacity is True or capacity == "auto":
+                capacity = {}
+            self._caps = capacity_plan(mcfg, statics, **capacity)
+            params, statics, mcfg = _pad_state(params, statics, mcfg,
+                                               self._caps)
+        self._install(params, statics, mcfg)
+
+    def _install(self, params, statics, mcfg) -> None:
+        """(Re)build the jitted scorer if the static config changed, and
+        put the state on device. The attribute writes at the bottom are
+        the swap point: requests issued before them serve the old state,
+        requests after serve the new — nothing in between."""
+        if self._fn is None or mcfg != self.mcfg:
+            if self._fn is not None:   # carry compiled-program count over
+                self._compiles_base += compile_count(self._fn, self._shapes)
+                self._shapes = set()
+            from repro.models import lightgcn as L
+
+            def score_topk(params, statics, user_ids):
+                scores = L.score_all_items(params, statics, mcfg, user_ids)
+                mask = statics.get("item_mask")
+                if mask is not None:   # capacity padding: pad items -> -inf
+                    scores = scores + mask[None, :]
+                return jax.lax.top_k(scores, self.k)
+
+            self._fn = jax.jit(score_topk)
+        new_params = jax.device_put(jax.tree.map(jnp.asarray, params))
+        new_statics = jax.device_put(jax.tree.map(jnp.asarray, statics))
+        jax.block_until_ready((new_params, new_statics))
+        self.mcfg = mcfg
+        self.params = new_params
+        self.statics = new_statics
 
     @classmethod
     def from_artifact(cls, artifact, k: int = 20,
-                      backend: Optional[str] = None) -> "RecsysSession":
+                      backend: Optional[str] = None, capacity=None,
+                      telemetry: Optional[StreamTelemetry] = None,
+                      ) -> "RecsysSession":
         """The deploy path: rebuild the scoring session from a loaded
         CompressedArtifact. `backend` overrides the backend recorded in
         the artifact meta (None keeps the trained choice)."""
         return cls(artifact.params, artifact.statics(), artifact.mcfg(),
-                   k=k, backend=backend)
+                   k=k, backend=backend, capacity=capacity,
+                   telemetry=telemetry)
+
+    # -- hot swap -----------------------------------------------------------
+    def swap(self, artifact) -> dict:
+        """Atomically switch to a new artifact's state between requests.
+
+        The only sanctioned way to change what a live session serves
+        (the arch test greps for out-of-band `.params`/`.statics`
+        writes). With a capacity ladder, a swap whose true sizes fit
+        under the current rungs reuses every compiled program — the
+        zero-new-compiles invariant pinned in tests/test_stream.py. A
+        swap that outgrows a rung re-plans the ladder and recompiles
+        once (counted as a capacity bump). Returns the swap stats.
+        """
+        t0 = time.perf_counter()
+        mcfg = dataclasses.replace(
+            artifact.mcfg(), lookup_backend=self.mcfg.lookup_backend)
+        params, statics = artifact.params, artifact.statics()
+        bumped = False
+        if self._caps is not None:
+            try:
+                params, statics, mcfg = _pad_state(params, statics, mcfg,
+                                                   self._caps)
+            except ValueError:          # outgrew a rung: bump the ladder
+                self._caps = capacity_plan(mcfg, statics, **self._caps)
+                params, statics, mcfg = _pad_state(params, statics, mcfg,
+                                                   self._caps)
+                bumped = True
+                self._stream.bump("capacity_bumps")
+        self._install(params, statics, mcfg)
+        ms = (time.perf_counter() - t0) * 1e3
+        self._stream.swap.record(ms)
+        return {"ms": round(ms, 3), "capacity_bumped": bumped,
+                "capacity": dict(self._caps) if self._caps else None}
 
     def warmup(self, batch: Optional[int] = None) -> None:
         batch = int(batch or 1)
@@ -112,12 +281,22 @@ class RecsysSession(Session):
 
     @property
     def compile_count(self) -> int:
-        return compile_count(self._fn, self._shapes)
+        """Distinct XLA programs over the session's whole life — compiles
+        retired by a capacity bump stay counted (the bump paid them)."""
+        return self._compiles_base + compile_count(self._fn, self._shapes)
+
+    @property
+    def telemetry(self) -> StreamTelemetry:
+        return self._stream
 
     def stats(self) -> dict:
-        return {"kind": "recsys", "k": self.k,
-                "backend": self.mcfg.lookup_backend or "auto",
-                "compiles": self.compile_count, **self._lat.summary()}
+        out = {"kind": "recsys", "k": self.k,
+               "backend": self.mcfg.lookup_backend or "auto",
+               "compiles": self.compile_count, **self._lat.summary()}
+        if self._caps is not None or self._stream.swap.count:
+            out["capacity"] = dict(self._caps) if self._caps else None
+            out["stream"] = self._stream.summary()
+        return out
 
 
 class ArchSession(Session):

@@ -4,6 +4,11 @@ Every Session and the BatchDispatcher carry a LatencyRecorder; `stats()`
 surfaces p50/p99 per-request wall time plus the number of distinct XLA
 programs compiled so far — the quantity the bucket ladder exists to
 bound (arbitrary traffic must compile at most `len(buckets)` programs).
+
+Streaming deployments additionally carry a ``StreamTelemetry``: hot-swap
+latency (a swap happens between requests, so its cost is pure serving
+headroom), label churn per refresh, and monotone counters for the
+replay loop (appends, cold assigns, refreshes, capacity bumps).
 """
 from __future__ import annotations
 
@@ -11,7 +16,7 @@ from typing import List
 
 import numpy as np
 
-__all__ = ["LatencyRecorder", "compile_count"]
+__all__ = ["LatencyRecorder", "StreamTelemetry", "compile_count"]
 
 
 class LatencyRecorder:
@@ -36,6 +41,40 @@ class LatencyRecorder:
         return {"requests": self.count,
                 "p50_ms": round(self.percentile(50), 3),
                 "p99_ms": round(self.percentile(99), 3)}
+
+
+class StreamTelemetry:
+    """Counters for the online co-clustering / hot-swap pipeline.
+
+    One instance is shared between the swap-capable session (which
+    records swap latency and capacity bumps) and the stream updater /
+    replay loop (which records label churn and event counters) — the
+    `summary()` is what launch/stream.py and stream_bench.py report.
+    """
+
+    def __init__(self):
+        self.swap = LatencyRecorder()         # ms per RecsysSession.swap
+        self._churn: List[float] = []         # per-refresh label churn
+        self.counters = {"appends": 0, "new_edges": 0, "cold_users": 0,
+                         "cold_items": 0, "refreshes": 0,
+                         "capacity_bumps": 0}
+
+    def bump(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + int(n)
+
+    def record_churn(self, fraction: float) -> None:
+        self._churn.append(float(fraction))
+
+    def summary(self) -> dict:
+        out = dict(self.counters)
+        out["swaps"] = self.swap.count
+        out["swap_p50_ms"] = round(self.swap.percentile(50), 3)
+        out["swap_p99_ms"] = round(self.swap.percentile(99), 3)
+        out["churn_mean"] = (round(float(np.mean(self._churn)), 4)
+                             if self._churn else float("nan"))
+        out["churn_last"] = (round(self._churn[-1], 4)
+                             if self._churn else float("nan"))
+        return out
 
 
 def compile_count(jitted, seen_shapes) -> int:

@@ -1,0 +1,201 @@
+"""Incremental membership: cold-start assignment + budgeted warm refresh.
+
+Two speeds of clustering for a live stream (PAPER.md §4.3 — the cheap
+LP solver is what makes periodic re-grouping affordable):
+
+  * ``ColdStartAssigner.assign`` — per event batch: place brand-new
+    users/items into the existing partition with ONE device-resident LP
+    half-step over only their incident edges
+    (``core.solver_jax.lp_cold_assign``). The volume-balance term is
+    kept: without it every cold node would sink into the hottest
+    cluster its neighbors touch.
+  * ``ColdStartAssigner.refresh`` — periodically: a budgeted
+    ``ClusterEngine.solve`` over the grown graph, warm-started from the
+    current labels (label propagation only merges into existing
+    neighbor labels, so a warm start is safe and usually converges in
+    1-2 sweeps), reporting per-side label churn.
+
+Labels live in the shared node-id space [0, n_nodes). ``grow_labels``
+extends a label vector to a grown universe, giving each new node a
+fresh singleton label from the newly created id range — ids the old
+partition cannot contain, so no accidental merges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import ClusterEngine, make_weights
+from repro.core.graph import BipartiteGraph
+from repro.core import solver_jax
+
+__all__ = ["ColdStartAssigner", "AssignStats", "RefreshStats",
+           "grow_labels"]
+
+
+def grow_labels(labels: np.ndarray, old_n_users: int, old_n_items: int,
+                n_users: int, n_items: int) -> np.ndarray:
+    """Extend a shared-id-space label vector [old_nu + old_nv] to a
+    grown universe [nu + nv], preserving old assignments and giving the
+    new nodes fresh singleton labels.
+
+    Fresh ids are allocated from [old_n, n): labels always satisfy
+    ``label < n_nodes`` (LP never mints ids — it only adopts existing
+    neighbor labels), so the new range cannot collide with any live
+    cluster id.
+    """
+    labels = np.asarray(labels, np.int32)
+    old_n = old_n_users + old_n_items
+    if labels.shape[0] != old_n:
+        raise ValueError(f"labels cover {labels.shape[0]} nodes, "
+                         f"expected {old_n}")
+    if n_users < old_n_users or n_items < old_n_items:
+        raise ValueError("universe cannot shrink")
+    fresh = np.arange(old_n, n_users + n_items, dtype=np.int32)
+    d_users = n_users - old_n_users
+    return np.concatenate([labels[:old_n_users], fresh[:d_users],
+                           labels[old_n_users:], fresh[d_users:]])
+
+
+@dataclasses.dataclass(frozen=True)
+class AssignStats:
+    n_new_users: int
+    n_new_items: int
+    adopted_users: int      # cold users that joined an existing cluster
+    adopted_items: int
+    ms: float               # wall time of the assignment
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshStats:
+    iters: int
+    churn_users: float      # fraction of pre-existing users relabeled
+    churn_items: float
+    ms: float
+    gamma: float = 1.0      # resolution the chosen partition solved at
+
+
+@dataclasses.dataclass
+class ColdStartAssigner:
+    """Places arriving nodes and periodically re-groups the graph.
+
+    engine: the ClusterEngine used for refresh solves (and for weight
+            scheme conventions); cold assignment itself runs the jax
+            half-step directly — stream/ is, with core/, the only layer
+            allowed to touch solver internals (arch rule in
+            tests/test_cluster_engine.py).
+    scheme: weight scheme (must match the scheme the partition was
+            built with, or the balance term is inconsistent).
+    gamma:  resolution the partition was solved at.
+    caps:   optional {"n_users","n_items","n_edges"} maxima: refresh
+            solves then run capacity-padded (``lp_solve_capped``) so a
+            whole replay of growing graphs reuses ONE compiled solve
+            program — without it every refresh retraces the while_loop
+            and steady-state re-grouping cost is compile-dominated.
+    """
+
+    engine: ClusterEngine = dataclasses.field(default_factory=ClusterEngine)
+    scheme: str = "hws"
+    gamma: float = 1.0
+    caps: Optional[dict] = None
+
+    def assign(self, graph: BipartiteGraph, labels: np.ndarray,
+               n_new_users: int, n_new_items: int,
+               ) -> Tuple[np.ndarray, AssignStats]:
+        """One cold-start half-step per side over the grown graph.
+
+        ``labels`` must already be grown (``grow_labels``) — a
+        zero-delta call (no new nodes) is a strict label no-op.
+        """
+        labels = np.asarray(labels, np.int32)
+        if n_new_users == 0 and n_new_items == 0:
+            return labels, AssignStats(0, 0, 0, 0, 0.0)
+        t0 = time.perf_counter()
+        wu, wv = make_weights(graph, self.scheme)
+        out = solver_jax.lp_cold_assign(graph, labels, wu, wv, self.gamma,
+                                        n_new_users, n_new_items)
+        ms = (time.perf_counter() - t0) * 1e3
+        nu = graph.n_users
+        moved_u = int(np.sum(out[nu - n_new_users:nu]
+                             != labels[nu - n_new_users:nu]))
+        moved_v = int(np.sum(out[-n_new_items:] != labels[-n_new_items:])
+                      if n_new_items else 0)
+        return out, AssignStats(int(n_new_users), int(n_new_items),
+                                moved_u, moved_v, ms)
+
+    def _solve(self, graph, wu, wv, gamma, budget, max_iters, init):
+        if self.caps is not None:
+            return solver_jax.lp_solve_capped(graph, wu, wv, gamma, budget,
+                                              max_iters, init_labels=init,
+                                              caps=self.caps)
+        return self.engine.solve(graph, wu, wv, gamma, budget, max_iters,
+                                 init_labels=init)
+
+    def refresh(self, graph: BipartiteGraph, labels: np.ndarray,
+                budget: Optional[int] = None, max_iters: int = 8,
+                probe_gamma: bool = True,
+                ) -> Tuple[np.ndarray, RefreshStats]:
+        """Budgeted warm-started re-grouping of the WHOLE grown graph.
+
+        Warm-starting from the live labels means a drift-free stream
+        converges in one sweep (the sweep that detects the fixed
+        point); churn is reported against the warm-start labels, which
+        is meaningful because LP relabels nodes only into ids that
+        already exist in the partition.
+
+        probe_gamma: additionally continue the warm chain DOWNWARD —
+        solve at gamma/2 seeded by the gamma result, then gamma/4
+        seeded by that — and keep the most-modular within-budget
+        partition (the same proxy fit_gamma selects by). Downward is
+        the only legitimate probe direction for a warm start: label
+        propagation merges labels but never splits, so seeding a
+        HIGHER gamma from the current partition just re-rates the same
+        coarse labels (and would ratchet the resolution upward on
+        noise). As the universe grows, the modularity-optimal
+        resolution drifts coarser; the chain tracks it and is
+        self-limiting — an over-merged probe scores lower modularity
+        and loses to the current gamma. The winning gamma becomes the
+        assigner's resolution going forward.
+        """
+        from repro.core.metrics import bipartite_modularity
+        labels = np.asarray(labels, np.int32)
+        t0 = time.perf_counter()
+        wu, wv = make_weights(graph, self.scheme)
+        nu = graph.n_users
+        gammas = [self.gamma] + ([self.gamma / 2.0, self.gamma / 4.0]
+                                 if probe_gamma else [])
+        primary = None
+        best = None
+        seed = labels
+        for g in gammas:
+            new, iters = self._solve(graph, wu, wv, g, budget, max_iters,
+                                     seed)
+            seed = new                  # fine -> coarse warm chain
+            if primary is None:
+                primary = (new, iters, g)
+            k = (np.unique(new[:nu]).size + np.unique(new[nu:]).size)
+            if budget is not None and k > budget:
+                continue
+            q = bipartite_modularity(graph, new)
+            if best is None or q > best[0]:
+                best = (q, new, iters, g)
+        new, iters, g_best = (best[1:] if best is not None else primary)
+        self.gamma = float(g_best)
+        ms = (time.perf_counter() - t0) * 1e3
+        churn_u = float(np.mean(new[:nu] != labels[:nu])) if nu else 0.0
+        churn_v = float(np.mean(new[nu:] != labels[nu:])) \
+            if graph.n_items else 0.0
+        return new, RefreshStats(int(iters), churn_u, churn_v, ms,
+                                 float(g_best))
+
+    def secondary(self, graph: BipartiteGraph,
+                  labels: np.ndarray) -> np.ndarray:
+        """Re-derive secondary user clusters (SCU) for the current
+        labels — required after any batch that touched users, since a
+        single new item can change the runner-up ranking."""
+        wu, wv = make_weights(graph, self.scheme)
+        return self.engine.secondary_user_labels(graph, labels, wu, wv,
+                                                 self.gamma)

@@ -1,0 +1,348 @@
+"""StreamUpdater: the online co-clustering state machine.
+
+Ties the three streaming layers together around one invariant — **label
+→ codebook-row maps are stable across updates** — which is what makes
+hot swaps meaningful: a user who stays in their cluster keeps pointing
+at the same trained codebook row through any number of appends and
+refreshes, so the serving artifact evolves by *deltas* instead of being
+rebuilt (Clustered Embedding Learning maintains its cluster-tied table
+the same way; GraphHash cannot).
+
+Per event batch (``apply_events``):
+  grow + append into the StreamingGraph, grow the label vector with
+  fresh singletons, cold-assign the new nodes (one LP half-step over
+  their incident edges), and map any genuinely new cluster to a fresh
+  zero-initialized codebook row. A zero row means a cold entity is
+  ranked purely by LightGCN propagation from its observed interactions
+  until the next fine-tune — the sane cold-start prior.
+
+Periodically (``refresh`` + ``tune``):
+  budgeted warm-started re-solve over the whole grown graph (label
+  churn reported), SCU re-derived for the new partition, then a short
+  BPR fine-tune warm-started from the live codebooks.
+
+``export_artifact`` snapshots the state as a ``CompressedArtifact``;
+``artifact.delta(prev)`` + ``RecsysSession.swap`` publish it.
+Codebook rows are never reclaimed when a cluster dies — the row goes
+orphan (zero gradient, zero references) until a future label reuses its
+id. Capacity-rung padding on the serving side absorbs the monotone row
+count; a full re-compaction is a rebuild, not a stream operation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import ClusterEngine
+from repro.core.sketch import Sketch
+
+from .assign import AssignStats, ColdStartAssigner, RefreshStats, \
+    grow_labels
+from .graph import StreamingGraph
+
+__all__ = ["StreamUpdater", "CapacityTuner"]
+
+
+class CapacityTuner:
+    """Fine-tunes codebooks against a GROWING graph with a compiled-once
+    BPR step.
+
+    A naive per-refresh ``Trainer`` re-jits its train step every time
+    the graph grows (new shapes), and at stream scale the refresh cost
+    becomes compile-dominated — exactly the failure the serving side
+    solves with capacity rungs. Same cure here: model statics and
+    codebooks are padded to capacity rungs (``repro.serve.session``'s
+    padding, which is zero-exact for propagation: pad edges carry norm
+    0), the padded statics are ARGUMENTS of the jitted step, and the
+    triplet batch comes from the host BPR sampler over the REAL graph —
+    so every refresh in a replay reuses one compiled program until a
+    rung is outgrown (then it re-plans and recompiles once).
+
+    Real-row gradients match an unpadded fine-tune up to segment-sum
+    reassociation: all lookup/propagation ops are row-independent and
+    pad rows enter every sum with weight exactly 0.
+    """
+
+    def __init__(self, model: dict, lr: float = 5e-3,
+                 batch_size: int = 1024, caps: Optional[dict] = None):
+        self.model = dict(model)
+        self.lr = float(lr)
+        self.batch_size = int(batch_size)
+        self._caps_hint = dict(caps or {})   # expected stream maxima
+        self._caps = None
+        self._mcfg_pad = None
+        self._step = None
+
+    def _build_step(self, mcfg_pad):
+        import jax
+        from repro.models import lightgcn as L
+        from repro.training import optimizer as opt_lib
+        self._optimizer = opt_lib.adamw(lr=self.lr)
+
+        @jax.jit
+        def step(params, opt_state, statics, batch):
+            loss, grads = jax.value_and_grad(L.bpr_loss_fn)(
+                params, statics, batch, mcfg_pad)
+            params, opt_state = self._optimizer.update(grads, opt_state,
+                                                       params)
+            return params, opt_state, loss
+
+        self._step = step
+        self._mcfg_pad = mcfg_pad
+
+    def tune(self, graph, sketch: Sketch, params: Dict[str, np.ndarray],
+             steps: int, seed: int = 0) -> Dict[str, np.ndarray]:
+        """Run ``steps`` BPR updates; returns the tuned (real-row)
+        codebooks. ``params`` is not mutated."""
+        import jax
+        import jax.numpy as jnp
+        from repro.data.sampler import BPRSampler
+        from repro.models import lightgcn as L
+        from repro.serve.session import _pad_state, capacity_plan
+        mcfg = L.from_sketch(graph, sketch, dim=int(self.model["dim"]),
+                             n_layers=int(self.model["n_layers"]),
+                             l2=float(self.model["l2"]),
+                             lookup_backend=self.model.get("lookup_backend"))
+        statics = L.make_statics(graph, sketch)
+        if self._caps is None:
+            hint = {k: v for k, v in self._caps_hint.items()
+                    if k in ("n_users", "n_items", "k_users", "k_items",
+                             "n_edges")}
+            self._caps = capacity_plan(mcfg, statics, **hint)
+        try:
+            params_p, statics_p, mcfg_pad = _pad_state(params, statics,
+                                                       mcfg, self._caps)
+        except ValueError:            # outgrew a rung: re-plan, recompile
+            self._caps = capacity_plan(mcfg, statics, **self._caps)
+            params_p, statics_p, mcfg_pad = _pad_state(params, statics,
+                                                       mcfg, self._caps)
+        if self._step is None or mcfg_pad != self._mcfg_pad:
+            self._build_step(mcfg_pad)
+        params_p = jax.tree.map(jnp.asarray, params_p)
+        statics_p = jax.tree.map(jnp.asarray, statics_p)
+        opt_state = self._optimizer.init(params_p)
+        sampler = BPRSampler(graph, self.batch_size, seed=seed)
+        for _ in range(int(steps)):
+            u, p, n = sampler.next_batch()
+            batch = {"user": jnp.asarray(u), "pos": jnp.asarray(p),
+                     "neg": jnp.asarray(n)}
+            params_p, opt_state, _loss = self._step(params_p, opt_state,
+                                                    statics_p, batch)
+        out = jax.device_get(params_p)
+        return {"user_table":
+                np.asarray(out["user_table"][:sketch.k_users]),
+                "item_table":
+                np.asarray(out["item_table"][:sketch.k_items])}
+
+
+class _RowMap:
+    """Stable shared-id-space label -> codebook row map for one side.
+
+    Rows are allocated once, in sorted order of first appearance, and
+    never re-used; ``map`` returns the rows for a label array,
+    allocating fresh rows for labels it has never seen.
+    """
+
+    def __init__(self, space: int):
+        self.row_of_label = np.full(int(space), -1, dtype=np.int32)
+        self.n_rows = 0
+
+    def seed(self, labels: np.ndarray, rows: np.ndarray) -> None:
+        labels = np.asarray(labels).ravel()
+        rows = np.asarray(rows, np.int32).ravel()
+        self.row_of_label[labels] = rows
+        self.n_rows = int(rows.max()) + 1 if rows.size else 0
+
+    def grow_space(self, space: int) -> None:
+        if space > self.row_of_label.shape[0]:
+            pad = np.full(space - self.row_of_label.shape[0], -1, np.int32)
+            self.row_of_label = np.concatenate([self.row_of_label, pad])
+
+    def map(self, labels: np.ndarray) -> np.ndarray:
+        labels = np.asarray(labels)
+        new = np.unique(labels[self.row_of_label[labels] < 0])
+        if new.size:
+            self.row_of_label[new] = self.n_rows + np.arange(
+                new.size, dtype=np.int32)
+            self.n_rows += int(new.size)
+        return self.row_of_label[labels].astype(np.int32)
+
+
+class StreamUpdater:
+    """Owns the live co-clustering state for one deployment.
+
+    Construct with ``from_trainer`` (the normal path — the trainer's
+    BACO sketch carries the raw joint labels the warm restarts need) or
+    directly from (graph, sketch, params).
+    """
+
+    def __init__(self, graph, sketch: Sketch, params: Dict[str, np.ndarray],
+                 model: dict, *, engine: Optional[ClusterEngine] = None,
+                 ratio: float = 0.25, capacity: Optional[dict] = None):
+        meta = sketch.meta or {}
+        if "joint_labels" not in meta:
+            raise ValueError(
+                "StreamUpdater needs the sketch's raw joint labels "
+                "(sketch.meta['joint_labels']); build the sketch in-process "
+                "with ClusterEngine.build — a loaded artifact only carries "
+                "compacted rows, which cannot seed a warm re-solve")
+        self.sgraph = (graph if isinstance(graph, StreamingGraph)
+                       else StreamingGraph.from_graph(graph))
+        self.labels = np.asarray(meta["joint_labels"], np.int32).copy()
+        self.n_hot = int(sketch.user_idx.shape[1])
+        # capacity maxima (expected end-of-stream sizes): refresh solves
+        # and fine-tunes then reuse one compiled program for the whole
+        # replay instead of retracing on every growth
+        self.capacity = dict(capacity) if capacity else None
+        self.assigner = ColdStartAssigner(
+            engine=engine or ClusterEngine(),
+            scheme=str(meta.get("scheme", "hws")),
+            gamma=float(meta.get("gamma", 1.0)),
+            caps=self.capacity)
+        self.ratio = float(ratio)
+        self.model = dict(model)
+        self.params = {k: np.array(v) for k, v in params.items()}
+        n = self.sgraph.n_nodes
+        nu = self.sgraph.n_users
+        self.umap = _RowMap(n)
+        self.vmap = _RowMap(n)
+        if self.n_hot == 2:
+            self.su = np.asarray(meta["secondary_labels"], np.int32).copy()
+            self.umap.seed(
+                np.concatenate([self.labels[:nu], self.su]),
+                np.concatenate([sketch.user_idx[:, 0],
+                                sketch.user_idx[:, 1]]))
+        else:
+            self.su = self.labels[:nu].copy()
+            self.umap.seed(self.labels[:nu], sketch.user_idx[:, 0])
+        self.vmap.seed(self.labels[nu:], sketch.item_idx[:, 0])
+        self._tuner: Optional[CapacityTuner] = None
+        self.sketch = self._rebuild_sketch()
+
+    @classmethod
+    def from_trainer(cls, trainer, *, engine: Optional[ClusterEngine] = None,
+                     ratio: float = 0.25,
+                     capacity: Optional[dict] = None) -> "StreamUpdater":
+        from repro.serve.artifact import _MODEL_KEYS
+        import jax
+        params = {k: np.asarray(jax.device_get(v))
+                  for k, v in trainer.params.items()}
+        model = {k: getattr(trainer.mcfg, k) for k in _MODEL_KEYS}
+        return cls(trainer.graph, trainer.sketch, params, model,
+                   engine=engine, ratio=ratio, capacity=capacity)
+
+    # -- derived state -------------------------------------------------------
+    @property
+    def gamma(self) -> float:
+        return self.assigner.gamma
+
+    def _rebuild_sketch(self) -> Sketch:
+        nu = self.sgraph.n_users
+        n = self.sgraph.n_nodes
+        self.umap.grow_space(n)
+        self.vmap.grow_space(n)
+        if self.n_hot == 2:
+            ur = self.umap.map(np.stack([self.labels[:nu], self.su], axis=1))
+        else:
+            ur = self.umap.map(self.labels[:nu][:, None])
+        vr = self.vmap.map(self.labels[nu:][:, None])
+        self._grow_codebooks()
+        self.sketch = Sketch(ur, vr, self.umap.n_rows, self.vmap.n_rows,
+                             method="baco(stream)",
+                             meta={"gamma": self.assigner.gamma,
+                                   "scheme": self.assigner.scheme,
+                                   "joint_labels": self.labels.copy(),
+                                   "secondary_labels": self.su.copy(),
+                                   "stream_version": self.sgraph.version})
+        return self.sketch
+
+    def _grow_codebooks(self) -> None:
+        """New clusters get fresh ZERO rows: a zero ego embedding ranks
+        by propagation only until the next fine-tune."""
+        d = int(self.model["dim"])
+        for key, n_rows in (("user_table", self.umap.n_rows),
+                            ("item_table", self.vmap.n_rows)):
+            tab = self.params[key]
+            if tab.shape[0] < n_rows:
+                pad = np.zeros((n_rows - tab.shape[0], d), tab.dtype)
+                self.params[key] = np.concatenate([tab, pad])
+
+    # -- the stream ----------------------------------------------------------
+    def apply_events(self, n_new_users: int, n_new_items: int,
+                     edge_u, edge_v) -> Dict[str, object]:
+        """One event batch: grow, append, cold-assign, re-map."""
+        old_nu, old_nv = self.sgraph.n_users, self.sgraph.n_items
+        self.sgraph.grow(old_nu + int(n_new_users),
+                         old_nv + int(n_new_items))
+        info = self.sgraph.append(edge_u, edge_v)
+        nu, nv = self.sgraph.n_users, self.sgraph.n_items
+        labels = grow_labels(self.labels, old_nu, old_nv, nu, nv)
+        su = np.concatenate([self.su, labels[old_nu:nu]])
+        self.labels, stats = self.assigner.assign(
+            self.sgraph.graph, labels, nu - old_nu, nv - old_nv)
+        # new users' secondary starts at their (possibly adopted) primary;
+        # the real runner-up is re-derived at the next refresh
+        su[old_nu:] = self.labels[old_nu:nu]
+        self.su = su
+        self._rebuild_sketch()
+        return {"append": info, "assign": stats}
+
+    def refresh(self, budget: Optional[int] = None,
+                max_iters: int = 8) -> RefreshStats:
+        """Budgeted warm re-solve of the whole grown graph + SCU
+        re-derivation for every (touched) user under the new labels."""
+        graph = self.sgraph.graph
+        if budget is None:
+            d = int(self.model["dim"])
+            b = max(2, int(round(self.ratio * graph.n_nodes)))
+            budget = (max(2, int((b * d - graph.n_users) // d))
+                      if self.n_hot == 2 else b)
+        self.labels, stats = self.assigner.refresh(graph, self.labels,
+                                                   budget, max_iters)
+        self.su = (self.assigner.secondary(graph, self.labels)
+                   if self.n_hot == 2 else self.labels[:graph.n_users])
+        self._rebuild_sketch()
+        return stats
+
+    def tune(self, steps: int, batch_size: int = 1024, lr: float = 5e-3,
+             seed: int = 0) -> None:
+        """Short BPR fine-tune of the codebooks, warm-started from the
+        live values (new rows start at zero and learn their cluster).
+        Runs through the CapacityTuner, so successive refreshes reuse
+        one compiled step program while the graph keeps growing."""
+        if self._tuner is None or self._tuner.lr != float(lr) \
+                or self._tuner.batch_size != int(batch_size):
+            self._tuner = CapacityTuner(self.model, lr=lr,
+                                        batch_size=batch_size,
+                                        caps=self.capacity)
+        self.params = self._tuner.tune(
+            self.sgraph.graph, self.sketch, self.params, steps,
+            seed=int(seed) + self.sgraph.version)
+
+    # -- publication ---------------------------------------------------------
+    def export_artifact(self):
+        """Snapshot the live state as a deployable CompressedArtifact
+        (delta against the previous export to publish cheaply)."""
+        from repro.serve import CompressedArtifact
+        graph = self.sgraph.graph
+        du = np.maximum(graph.user_degrees(), 1).astype(np.float32)
+        dv = np.maximum(graph.item_degrees(), 1).astype(np.float32)
+        norm = 1.0 / np.sqrt(du[graph.edge_u] * dv[graph.edge_v])
+        edges = {"edge_u": graph.edge_u.copy(), "edge_v": graph.edge_v.copy(),
+                 "edge_norm": norm.astype(np.float32)}
+        model = dict(self.model)
+        model.update(n_users=graph.n_users, n_items=graph.n_items,
+                     k_users=self.sketch.k_users,
+                     k_items=self.sketch.k_items, n_hot_users=self.n_hot)
+        provenance = {"method": self.sketch.method,
+                      "gamma": float(self.assigner.gamma),
+                      "scheme": self.assigner.scheme,
+                      "stream_version": int(self.sgraph.version),
+                      "n_edges": int(graph.n_edges),
+                      "exported_by": "StreamUpdater.export_artifact"}
+        return CompressedArtifact(
+            params={k: v.copy() for k, v in self.params.items()},
+            edges=edges, sketch=self.sketch, model=model,
+            provenance=provenance)

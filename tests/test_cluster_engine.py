@@ -323,9 +323,11 @@ def _offenders(paths, pattern):
 
 def test_no_solver_imports_outside_core():
     """solver_jax/solver_numpy/solver_sharded are ClusterEngine
-    implementation detail: only core/ may name them. (tests/ may too —
-    parity oracles — but no other layer.)"""
-    paths = [p for p in SRC.rglob("*.py") if "core" not in p.parts]
+    implementation detail: only core/ may name them — plus stream/,
+    whose cold-start assigner IS a solver half-step (the same standing
+    tests/ have as parity oracles). No other layer."""
+    paths = [p for p in SRC.rglob("*.py")
+             if "core" not in p.parts and "stream" not in p.parts]
     paths += sorted((REPO / "benchmarks").glob("*.py"))
     paths += sorted((REPO / "examples").glob("*.py"))
     offenders = _offenders(paths, SOLVER_IMPORT)

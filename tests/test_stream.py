@@ -1,0 +1,460 @@
+"""repro.stream: incremental-vs-rebuild graph parity (property-style),
+cold-start assignment vs a numpy oracle (bitwise) + zero-delta no-op,
+the drift generator's SeedSequence determinism, artifact deltas
+(round-trip, wrong-base, save/load), capacity-padded sessions
+(padded == exact top-k; swap adds zero XLA compiles — the acceptance
+pin), the StreamUpdater end to end, the baselines unknown-kwarg
+satellite, and the grep rules for the new layer."""
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+from repro.core import BipartiteGraph, ClusterEngine, make_weights
+from repro.core import solver_jax
+from repro.data import drifting_coclusters, planted_coclusters
+from repro.stream import (ColdStartAssigner, StreamingGraph, StreamUpdater,
+                          grow_labels)
+
+RNG = np.random.default_rng(11)
+
+
+def small_graph(seed=0, nu=240, nv=200, k=10):
+    g, _, _ = planted_coclusters(nu, nv, k_true=k, avg_deg=8, seed=seed)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# StreamingGraph: incremental build == one-shot rebuild, bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_streaming_append_bitwise_equals_rebuild(seed):
+    """Random block splits + interleaved grows: edges, both CSRs and
+    degrees must be bitwise the one-shot from_edges build."""
+    rng = np.random.default_rng(seed)
+    nu, nv, ne = 180, 150, 4000
+    eu = rng.integers(0, nu, ne)
+    ev = rng.integers(0, nv, ne)
+    ref = BipartiteGraph.from_edges(nu, nv, eu, ev)
+    # start from a smaller universe holding a prefix, then grow + append
+    nu0, nv0 = 60, 50
+    sg = StreamingGraph(nu0, nv0)
+    pre = (eu < nu0) & (ev < nv0)
+    sg.append(eu[pre], ev[pre])
+    sg.grow(nu, nv)
+    cuts = np.sort(rng.choice(ne, size=rng.integers(1, 6), replace=False))
+    for lo, hi in zip(np.r_[0, cuts], np.r_[cuts, ne]):
+        sg.append(eu[lo:hi], ev[lo:hi])
+    g = sg.graph
+    assert np.array_equal(g.edge_u, ref.edge_u)
+    assert np.array_equal(g.edge_v, ref.edge_v)
+    assert np.array_equal(g.perm_by_item, ref.perm_by_item)
+    assert np.array_equal(g.user_degrees(), ref.user_degrees())
+    assert np.array_equal(g.item_degrees(), ref.item_degrees())
+    for a, b in zip(g.user_csr(), ref.user_csr()):
+        assert np.array_equal(a, b)
+    for a, b in zip(g.item_csr(), ref.item_csr()):
+        assert np.array_equal(a, b)
+    # the incremental degree memos are seeded, not recomputed
+    assert g.user_degrees() is sg.user_degrees()
+
+
+def test_streaming_append_dedup_and_touched():
+    sg = StreamingGraph(4, 4)
+    info = sg.append([0, 0, 1], [1, 1, 2])        # in-block dup
+    assert info.n_appended == 3 and info.n_new_edges == 2
+    info = sg.append([0, 2], [1, 3])              # cross-append dup
+    assert info.n_new_edges == 1
+    assert info.touched_users.tolist() == [2]
+    assert info.touched_items.tolist() == [3]
+    assert sg.n_edges == 3
+    # old snapshots stay frozen across later appends
+    g_old = sg.graph
+    deg_old = g_old.user_degrees().copy()
+    sg.append([3], [0])
+    assert np.array_equal(g_old.user_degrees(), deg_old)
+
+
+def test_streaming_grow_validates_and_reencodes():
+    sg = StreamingGraph(3, 3)
+    sg.append([0, 2], [2, 1])
+    sg.grow(5, 7)                                  # item growth re-encodes
+    with pytest.raises(ValueError):
+        sg.grow(4, 7)
+    sg.append([4], [6])
+    ref = BipartiteGraph.from_edges(5, 7, [0, 2, 4], [2, 1, 6])
+    assert np.array_equal(sg.graph.edge_u, ref.edge_u)
+    assert np.array_equal(sg.graph.edge_v, ref.edge_v)
+    with pytest.raises(ValueError):
+        sg.append([0], [99])
+
+
+# ---------------------------------------------------------------------------
+# cold-start assignment: numpy oracle parity + zero-delta no-op
+# ---------------------------------------------------------------------------
+def _cold_oracle(graph, labels, wu, wv, gamma, n_new_u, n_new_v):
+    """Sequential reference of the two cold half-steps (Eq. 13/14 with
+    smallest-label tie-break; own score counts the singleton's zero
+    opposite-side volume)."""
+    lab = np.asarray(labels, np.int64).copy()
+    nu, n = graph.n_users, graph.n_nodes
+
+    def half(nodes, nbr_of, opp_labels, w_self, off):
+        w_by_label = np.zeros(n)
+        np.add.at(w_by_label, opp_labels,
+                  wv if off == 0 else wu)  # opposite side weights
+        for x in nodes:
+            nbrs = nbr_of(x)
+            own = lab[off + x]
+            own_score = (np.sum(opp_labels[nbrs] == own)
+                         - gamma * w_self[x] * w_by_label[own])
+            best_lab, best = None, -np.inf
+            cand, cnt = np.unique(opp_labels[nbrs], return_counts=True)
+            for c, k in zip(cand, cnt):
+                s = k - gamma * w_self[x] * w_by_label[c]
+                if s > best or (s == best and c < best_lab):
+                    best, best_lab = s, c
+            if best_lab is not None and best > own_score:
+                lab[off + x] = best_lab
+
+    ui, un = graph.user_csr()
+    half(np.arange(nu - n_new_u, nu), lambda x: un[ui[x]:ui[x + 1]],
+         lab[nu:], wu, 0)
+    vi, vn = graph.item_csr()
+    half(np.arange(graph.n_items - n_new_v, graph.n_items),
+         lambda x: vn[vi[x]:vi[x + 1]], lab[:nu], wv, nu)
+    return lab.astype(np.int32)
+
+
+@pytest.mark.parametrize("gamma", [0.0, 1.0, 8.0])
+def test_cold_assign_matches_oracle(gamma):
+    g0 = small_graph(seed=3)
+    wu0, wv0 = make_weights(g0, "hws")
+    labels0, _ = solver_jax.lp_solve(g0, wu0, wv0, 1.0, None, 6)
+    # grow the universe and append edges for the new suffix nodes
+    sg = StreamingGraph.from_graph(g0)
+    rng = np.random.default_rng(5)
+    d_u, d_v = 13, 9
+    nu, nv = g0.n_users + d_u, g0.n_items + d_v
+    sg.grow(nu, nv)
+    sg.append(rng.integers(g0.n_users, nu, 60), rng.integers(0, nv, 60))
+    sg.append(rng.integers(0, nu, 30), rng.integers(g0.n_items, nv, 30))
+    g = sg.graph
+    lab = grow_labels(labels0, g0.n_users, g0.n_items, nu, nv)
+    wu, wv = make_weights(g, "hws")
+    got = solver_jax.lp_cold_assign(g, lab, wu, wv, gamma, d_u, d_v)
+    want = _cold_oracle(g, lab, wu, wv, gamma, d_u, d_v)
+    assert np.array_equal(got, want)
+    # old nodes never move
+    assert np.array_equal(got[:g0.n_users], lab[:g0.n_users])
+    assert np.array_equal(got[nu:nu + g0.n_items], lab[nu:nu + g0.n_items])
+
+
+def test_cold_assign_zero_delta_is_noop():
+    g = small_graph(seed=1)
+    wu, wv = make_weights(g, "hws")
+    labels, _ = solver_jax.lp_solve(g, wu, wv, 1.0, None, 4)
+    out = solver_jax.lp_cold_assign(g, labels, wu, wv, 1.0, 0, 0)
+    assert np.array_equal(out, labels)
+    out2, stats = ColdStartAssigner().assign(g, labels, 0, 0)
+    assert np.array_equal(out2, labels)
+    assert stats.ms == 0.0 and stats.n_new_users == 0
+
+
+def test_cold_assign_balance_term_steers_from_hot_cluster():
+    """A new user tied between a huge and a small cluster must pick the
+    small one once the volume penalty is on (and the hot one at
+    gamma=0, where only counts and the tie-break matter)."""
+    # items 0..9 in cluster A (label 2), items 10..11 in cluster B (12)
+    nu0, nv = 2, 12
+    eu = [0] * 10 + [1] * 2
+    ev = list(range(10)) + [10, 11]
+    labels = np.asarray([2, 12] + [2] * 10 + [12] * 2, np.int32)
+    g = BipartiteGraph.from_edges(nu0 + 1, nv,
+                                  eu + [2, 2, 2, 2],
+                                  ev + [0, 1, 10, 11])
+    lab = np.insert(labels, nu0, g.n_nodes - 1)    # fresh singleton user
+    wu = np.ones(g.n_users)
+    wv = np.ones(g.n_items)
+    hot = solver_jax.lp_cold_assign(g, lab, wu, wv, 0.0, 1, 0)
+    cold = solver_jax.lp_cold_assign(g, lab, wu, wv, 0.5, 1, 0)
+    assert hot[2] == 2         # gamma=0: 2-2 count tie -> smaller label
+    assert cold[2] == 12       # balanced: 2 - .5*10 < 2 - .5*2 -> small
+
+
+# ---------------------------------------------------------------------------
+# capacity-padded solve: bit-for-bit the plain solve
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("budget", [None, 115])
+@pytest.mark.parametrize("warm", [False, True])
+def test_lp_solve_capped_bitwise(budget, warm):
+    """Pad users/items/edges to rungs: real labels (and the iteration
+    count, budget compensation included) must be BIT-FOR-BIT the
+    unpadded solve — pads carry weight 0 and an unreachable label."""
+    g = small_graph(seed=4)
+    wu, wv = make_weights(g, "hws")
+    init = None
+    if warm:
+        init, _ = solver_jax.lp_solve(g, wu, wv, 16.0, None, 3)
+    a, ia = solver_jax.lp_solve(g, wu, wv, 1.0, budget, 8,
+                                init_labels=init)
+    caps = {"n_users": 2 * g.n_users, "n_items": 2 * g.n_items,
+            "n_edges": 2 * g.n_edges}
+    b, ib = solver_jax.lp_solve_capped(g, wu, wv, 1.0, budget, 8,
+                                       init_labels=init, caps=caps)
+    assert np.array_equal(a, b)
+    assert ia == ib
+    # edge-only padding must not leak the pad label onto real nodes
+    c, ic = solver_jax.lp_solve_capped(g, wu, wv, 1.0, budget, 8,
+                                       init_labels=init,
+                                       caps={"n_edges": 4 * g.n_edges})
+    assert np.array_equal(a, c)
+    assert ia == ic
+
+
+# ---------------------------------------------------------------------------
+# drift generator: SeedSequence([seed, t]) determinism
+# ---------------------------------------------------------------------------
+def test_drift_stream_deterministic_and_seed_keyed():
+    a = drifting_coclusters(300, 240, 12, 8, T=3, seed=7)
+    b = drifting_coclusters(300, 240, 12, 8, T=3, seed=7)
+    c = drifting_coclusters(300, 240, 12, 8, T=3, seed=8)
+    assert np.array_equal(a.base.edge_u, b.base.edge_u)
+    assert np.array_equal(a.true_uc, b.true_uc)
+    for sa, sb in zip(a.steps, b.steps):
+        assert sa.n_new_users == sb.n_new_users
+        assert np.array_equal(sa.edge_u, sb.edge_u)
+        assert np.array_equal(sa.edge_v, sb.edge_v)
+    assert not all(np.array_equal(sa.edge_u, sc.edge_u)
+                   for sa, sc in zip(a.steps, c.steps))
+
+
+def test_drift_stream_arrivals_are_suffixes():
+    s = drifting_coclusters(300, 240, 12, 8, T=3, seed=0)
+    cu, cv = s.n_warm_users, s.n_warm_items
+    for step in s.steps:
+        assert step.edge_u.size == step.edge_v.size
+        cu += step.n_new_users
+        cv += step.n_new_items
+        assert step.edge_u.max() < cu and step.edge_v.max() < cv
+    assert (cu, cv) == (s.n_users, s.n_items)
+    # replaying the stream reproduces the union graph exactly
+    sg = StreamingGraph.from_graph(s.base)
+    cu, cv = s.n_warm_users, s.n_warm_items
+    for step in s.steps:
+        cu += step.n_new_users
+        cv += step.n_new_items
+        sg.grow(cu, cv)
+        sg.append(step.edge_u, step.edge_v)
+    ref = BipartiteGraph.from_edges(s.n_users, s.n_items, *s.full_edges())
+    assert np.array_equal(sg.graph.edge_u, ref.edge_u)
+    assert np.array_equal(sg.graph.edge_v, ref.edge_v)
+
+
+# ---------------------------------------------------------------------------
+# artifact deltas + capacity sessions + hot swap
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stream_fixture():
+    """One bootstrap + two applied event batches, shared by the swap /
+    delta / updater tests (training is the slow part)."""
+    import jax
+    from repro.training import Trainer, TrainConfig
+    stream = drifting_coclusters(320, 260, 10, 8, T=2, seed=2)
+    engine = ClusterEngine(solver="jax")
+    sketch = engine.build(stream.base, d=16, ratio=0.25)
+    tr = Trainer(stream.base, sketch,
+                 TrainConfig(dim=16, steps=25, batch_size=256, lr=5e-3))
+    tr.run(log_every=0)
+    art0 = tr.export()
+    updater = StreamUpdater.from_trainer(tr, engine=engine)
+    for step in stream.steps:
+        updater.apply_events(step.n_new_users, step.n_new_items,
+                             step.edge_u, step.edge_v)
+    rstats = updater.refresh()
+    art1 = updater.export_artifact()
+    return dict(stream=stream, art0=art0, art1=art1, updater=updater,
+                rstats=rstats)
+
+
+def test_artifact_delta_roundtrip(stream_fixture, tmp_path):
+    from repro.serve import ArtifactDelta
+    art0, art1 = stream_fixture["art0"], stream_fixture["art1"]
+    delta = art1.delta(art0)
+    assert delta.base_id == art0.content_id()
+    # the stream grew every array group: sketch, edges and codebooks
+    assert any(k.startswith("sketch/") for k in delta.changed)
+    assert any(k.startswith("edges/") for k in delta.changed)
+    assert delta.nbytes() > 0
+    out = art0.apply_delta(delta)
+    assert out.content_id() == art1.content_id()
+    for key, arr in art1._flat().items():
+        assert np.array_equal(out._flat()[key], arr)
+    # wrong base refuses
+    with pytest.raises(ValueError, match="expects base"):
+        art1.apply_delta(delta)
+    # persisted delta round-trips through the bundle layer
+    delta.save(str(tmp_path / "d0"))
+    loaded = ArtifactDelta.load(str(tmp_path / "d0"))
+    assert loaded.base_id == delta.base_id
+    assert art0.apply_delta(loaded).content_id() == art1.content_id()
+
+
+def test_delta_of_identical_artifact_is_empty(stream_fixture):
+    art1 = stream_fixture["art1"]
+    d = art1.delta(art1)
+    assert d.changed == {} and d.removed == ()
+    assert art1.apply_delta(d).content_id() == art1.content_id()
+
+
+def test_capacity_padded_session_matches_exact(stream_fixture):
+    art1 = stream_fixture["art1"]
+    ids = np.arange(12, dtype=np.int32)
+    exact = art1.session(k=8)
+    padded = art1.session(k=8, capacity="auto")
+    ve, ie = exact(ids)
+    vp, ip = padded(ids)
+    assert np.array_equal(np.asarray(ie), np.asarray(ip))
+    np.testing.assert_allclose(np.asarray(ve), np.asarray(vp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_swap_adds_zero_compiles_after_warmup(stream_fixture):
+    """The acceptance pin: within capacity, RecsysSession.swap compiles
+    nothing — every request after a swap reuses the warmed programs."""
+    stream = stream_fixture["stream"]
+    art0, art1 = stream_fixture["art0"], stream_fixture["art1"]
+    session = art0.session(
+        k=8, capacity={"n_users": stream.n_users,
+                       "n_items": stream.n_items,
+                       "k_users": stream.n_users,
+                       "k_items": stream.n_items,
+                       "n_edges": 8 * stream.base.n_edges})
+    session.warmup(4)
+    session(np.arange(4, dtype=np.int32))
+    before = session.compile_count
+    swap = session.swap(art1)
+    assert not swap["capacity_bumped"]
+    v1, i1 = session(np.arange(4, dtype=np.int32))
+    assert session.compile_count == before
+    assert session.telemetry.swap.count == 1
+    # and the swapped state is really serving: matches an exact session
+    ve, ie = art1.session(k=8)(np.arange(4, dtype=np.int32))
+    assert np.array_equal(np.asarray(ie), np.asarray(i1))
+    # a newcomer (id beyond art0's universe) is servable post-swap
+    newcomer = np.asarray([stream.n_warm_users + 1], np.int32)
+    session(newcomer)
+
+
+def test_swap_capacity_bump_recompiles_but_serves(stream_fixture):
+    art0, art1 = stream_fixture["art0"], stream_fixture["art1"]
+    session = art0.session(k=8, capacity="auto")   # rungs sized to art0
+    session.warmup(4)
+    swap = session.swap(art1)                      # outgrows the rungs
+    assert swap["capacity_bumped"]
+    assert session.telemetry.counters["capacity_bumps"] == 1
+    v, i = session(np.arange(4, dtype=np.int32))
+    ve, ie = art1.session(k=8)(np.arange(4, dtype=np.int32))
+    assert np.array_equal(np.asarray(ie), np.asarray(i))
+
+
+def test_updater_state_consistency(stream_fixture):
+    up = stream_fixture["updater"]
+    stream = stream_fixture["stream"]
+    assert up.sgraph.n_users == stream.n_users
+    assert up.sgraph.n_items == stream.n_items
+    sk = up.sketch
+    assert sk.user_idx.shape == (stream.n_users, 2)
+    assert sk.user_idx.max() < sk.k_users
+    assert sk.item_idx.max() < sk.k_items
+    assert up.params["user_table"].shape[0] == sk.k_users
+    assert up.params["item_table"].shape[0] == sk.k_items
+    # refresh re-derived SCU for the new labels
+    assigner = up.assigner
+    su = assigner.secondary(up.sgraph.graph, up.labels)
+    assert np.array_equal(up.su, su)
+    r = stream_fixture["rstats"]
+    assert 0.0 <= r.churn_users <= 1.0 and 0.0 <= r.churn_items <= 1.0
+    assert r.iters >= 1
+
+
+def test_updater_requires_joint_labels():
+    from repro.core.sketch import Sketch
+    g = small_graph(seed=2, nu=40, nv=30)
+    sk = Sketch.one_hot(np.zeros(40, np.int64), np.zeros(30, np.int64))
+    with pytest.raises(ValueError, match="joint labels"):
+        StreamUpdater(g, sk, {"user_table": np.zeros((1, 4)),
+                              "item_table": np.zeros((1, 4))},
+                      {"dim": 4})
+
+
+# ---------------------------------------------------------------------------
+# satellite: build_sketch rejects unknown kwargs
+# ---------------------------------------------------------------------------
+def test_build_sketch_rejects_unknown_kwargs():
+    from repro.core import build_sketch
+    g = small_graph(seed=0, nu=60, nv=50, k=6)
+    with pytest.raises(TypeError, match="gamm"):
+        build_sketch("lp", g, budget=30, gamm=2.0)       # the typo'd kwarg
+    with pytest.raises(TypeError, match="valid kwargs"):
+        build_sketch("random", g, budget=30, n_bits=4)   # wrong builder
+    with pytest.raises(TypeError):
+        build_sketch("baco", g, budget=30, gamm=2.0)
+    # kwargs a registry preset pins are rejected, not doubly-passed
+    with pytest.raises(TypeError, match="scu"):
+        build_sketch("baco_no_scu", g, budget=30, scu=True)
+    # real kwargs still pass through
+    sk = build_sketch("lp", g, budget=30, max_iters=2)
+    assert sk.method.startswith("lp")
+    sk = build_sketch("lsh", g, budget=30, n_bits=8)
+    assert sk.method == "lsh"
+
+
+# ---------------------------------------------------------------------------
+# architecture rules for the stream layer
+# ---------------------------------------------------------------------------
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+REPO = SRC.parents[1]
+
+# raw BipartiteGraph surgery: only core/ and stream/ may touch the key
+# run, the merge helpers or the memo cache
+GRAPH_MUTATION = re.compile(
+    r"_from_sorted_keys|_merge_unique|_merge_disjoint|_fresh_mask"
+    r"|_block_keys|\._cache\[")
+# sessions change codebooks via swap() only: no out-of-band writes to a
+# session's device state
+SESSION_WRITE = re.compile(
+    r"\b\w*(?:session|sess)\w*\.(?:params|statics)\s*=")
+
+
+def _offenders(paths, pattern):
+    out = []
+    for path in paths:
+        text = path.read_text()
+        for m in pattern.finditer(text):
+            line = text.count("\n", 0, m.start()) + 1
+            out.append(f"{path}:{line}: {m.group(0)!r}")
+    return out
+
+
+def test_no_graph_surgery_outside_core_and_stream():
+    paths = [p for p in SRC.rglob("*.py")
+             if "core" not in p.parts and "stream" not in p.parts]
+    paths += sorted((REPO / "benchmarks").glob("*.py"))
+    paths += sorted((REPO / "examples").glob("*.py"))
+    offenders = _offenders(paths, GRAPH_MUTATION)
+    assert not offenders, (
+        "raw BipartiteGraph key/memo surgery belongs to core/ and "
+        "stream/ only (use StreamingGraph.append/grow):\n"
+        + "\n".join(offenders))
+
+
+def test_sessions_only_swap():
+    paths = [p for p in SRC.rglob("*.py") if "serve" not in p.parts]
+    paths += sorted((REPO / "benchmarks").glob("*.py"))
+    paths += sorted((REPO / "examples").glob("*.py"))
+    offenders = _offenders(paths, SESSION_WRITE)
+    assert not offenders, (
+        "live sessions change codebook/sketch state via "
+        "RecsysSession.swap(artifact) only:\n" + "\n".join(offenders))

@@ -2,12 +2,20 @@
 
 Each benchmark in this repo emits a machine-readable record
 (BENCH_serve.json, BENCH_cluster.json, BENCH_train.json,
-BENCH_stream.json, ...). CI uploads them side by side; this tool is the
-one place they are read together — the printed table is the repo's perf
-trajectory at a glance, and `--json` re-emits the merged record for
-downstream tooling.
+BENCH_stream.json, BENCH_kernel.json, ...). CI uploads them side by
+side; this tool is the one place they are read together — the printed
+table is the repo's perf trajectory at a glance, and `--json` re-emits
+the merged record for downstream tooling.
 
     python benchmarks/bench_summary.py [--dir .] [--json]
+
+``--check --against BASE_DIR`` compares the headline metrics of the
+records under --dir against the committed BENCH_*.json trajectory in
+BASE_DIR and prints a WARNING for every metric that moved more than 20%
+(--threshold to tune) in its bad direction — latency / compile counts
+up, speedup / bandwidth / recall down. Warn-only by default (exit 0) so
+a noisy CPU runner can't hard-fail CI; ``--strict`` exits 1 on any
+warning.
 """
 from __future__ import annotations
 
@@ -58,9 +66,83 @@ def _headline(name: str, rec: dict) -> list:
                 "recall_stream", "recall_full", "recall_gap_recovered",
                 "compiles")
         return [(k, rec[k]) for k in keys if k in rec]
+    if kind == "kernel":
+        fused = [r for r in rec.get("fused", [])
+                 if isinstance(r, dict) and "us_per_call" in r]
+        out = [("fused records", len(fused))]
+        for variant, label in (("fused", "fused_gbps"),
+                               ("fused_int8", "int8_gbps")):
+            rows = [r["achieved_gbps"] for r in fused
+                    if r.get("variant") == variant
+                    and isinstance(r.get("achieved_gbps"), (int, float))]
+            if rows:
+                out.append((f"best {label}", max(rows)))
+        errors = [r for r in rec.get("codebook_lookup", [])
+                  if isinstance(r, dict) and "error" in r]
+        out.append(("lookup errors", len(errors)))
+        return out
     # unknown bench kind: surface its scalar fields
     return [(k, v) for k, v in rec.items()
             if isinstance(v, (int, float, str)) and k != "bench"][:6]
+
+
+# metric-direction heuristics for --check: a metric whose name matches a
+# HIGHER token is good-when-up (speedups, bandwidth, recall); otherwise a
+# LOWER token marks it good-when-down (latencies, compile/error counts).
+# HIGHER is checked first so e.g. "speedup_vs_seed" never trips on "_s".
+_HIGHER = ("speedup", "gbps", "recall", "recovered", "records", "buckets")
+_LOWER = ("_ms", "_us", "us_per", "compiles", "_s", "frac_of_full", "err",
+          "errors")
+
+
+def _direction(metric: str):
+    """'higher' / 'lower' if the metric has a known good direction,
+    else None (skipped by --check)."""
+    if any(t in metric for t in _HIGHER):
+        return "higher"
+    if any(t in metric for t in _LOWER):
+        return "lower"
+    return None
+
+
+def check(directory: str, against: str, threshold: float = 0.20) -> list:
+    """Compare headline metrics under ``directory`` vs the baseline
+    records in ``against``. Returns warning strings for every numeric
+    metric that regressed more than ``threshold`` (relative) in its bad
+    direction; metrics without a known direction, non-numeric values,
+    and records missing on either side are skipped."""
+    cur = summarize(directory)
+    base = summarize(against)
+    warnings = []
+    for name, rec in cur.items():
+        ref = base.get(name)
+        if ref is None or "error" in rec or "error" in ref:
+            continue
+        ref_metrics = dict(_headline(name, ref))
+        for metric, value in _headline(name, rec):
+            bval = ref_metrics.get(metric)
+            direction = _direction(metric)
+            if direction is None:
+                continue
+            if not isinstance(value, (int, float)) or isinstance(value, bool):
+                continue
+            if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+                continue
+            if bval == 0:
+                # zero baseline: any increase of a lower-better count
+                # (compiles, errors) is a regression; ratios undefined
+                if direction == "lower" and value > 0:
+                    warnings.append(
+                        f"{name}: {metric} rose from 0 to {_fmt(value)}")
+                continue
+            rel = (value - bval) / abs(bval)
+            bad = rel > threshold if direction == "lower" \
+                else rel < -threshold
+            if bad:
+                warnings.append(
+                    f"{name}: {metric} {_fmt(bval)} -> {_fmt(value)} "
+                    f"({rel:+.0%}, {direction}-is-better)")
+    return warnings
 
 
 def summarize(directory: str = ".") -> dict:
@@ -81,7 +163,26 @@ def main(argv=None):
                     help="directory holding the BENCH_*.json records")
     ap.add_argument("--json", action="store_true",
                     help="emit the merged record instead of the table")
+    ap.add_argument("--check", action="store_true",
+                    help="warn when a headline metric regresses vs the "
+                         "baseline records (see --against)")
+    ap.add_argument("--against", default=None,
+                    help="baseline directory for --check (default: --dir, "
+                         "i.e. the committed records in the repo root)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative regression threshold for --check")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if --check produced any warning")
     args = ap.parse_args(argv)
+    if args.check:
+        warnings = check(args.dir, args.against or args.dir,
+                         threshold=args.threshold)
+        for w in warnings:
+            print(f"WARNING: {w}")
+        if not warnings:
+            print(f"check ok: no headline metric regressed more than "
+                  f"{args.threshold:.0%}")
+        return 1 if (warnings and args.strict) else 0
     merged = summarize(args.dir)
     if args.json:
         print(json.dumps(merged, indent=2))

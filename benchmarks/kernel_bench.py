@@ -33,6 +33,19 @@ SWEEP_SHAPES = [
     (512, 16384, 128, 2),
 ]
 
+# fused serving-scorer sweep: (B, n_items, d, K). The win is a bandwidth
+# statement — each record carries its analytic bytes so the roofline can
+# place achieved bytes/s against the HBM bound (roofline.py --serving).
+FUSED_SHAPES = [
+    (64, 4096, 64, 20),
+    (64, 16384, 64, 20),
+    (256, 16384, 64, 100),
+]
+# codebook-expansion variant (B, n_items, d, K, codebook_rows, H): the
+# interpret grid walks one codebook row per step, so keep n_items modest
+# off-TPU — this is a correctness + traffic record there, not a perf one
+FUSED_CB_SHAPE = (64, 2048, 64, 20, 512, 2)
+
 
 def bench_backends(shapes=None, repeats: int = 3):
     """Per-backend codebook-lookup timings -> list of JSON-able records."""
@@ -52,9 +65,13 @@ def bench_backends(shapes=None, repeats: int = 3):
             fn = jax.jit(lambda cb, sk, i, e=eng: e.codebook_lookup(cb, sk, i))
             try:
                 jax.block_until_ready(fn(cb, sketch, ids))   # compile
-            except Exception as exc:  # backend can't do this shape
+            except (NotImplementedError, ValueError) as exc:
+                # a declared capability/shape gap is a legitimate row;
+                # anything else is a real kernel bug and must re-raise
+                # rather than hide as a "backend can't do this" record
                 records.append({"backend": name, "B": b, "K": k, "d": d,
-                                "H": h, "error": str(exc)[:200]})
+                                "H": h, "error": str(exc)[:200],
+                                "error_type": type(exc).__name__})
                 continue
             t0 = time.time()
             for _ in range(repeats):
@@ -67,6 +84,88 @@ def bench_backends(shapes=None, repeats: int = 3):
                 "gb_moved": bytes_moved / 1e9,
                 "intensity_flops_per_byte": (b * h * d) / bytes_moved,
             })
+    return records
+
+
+def bench_fused(shapes=None, cb_shape=FUSED_CB_SHAPE, repeats: int = 3):
+    """Fused-vs-dense top-k sweep over (B, n_items, d, K).
+
+    Variants per shape:
+      dense_xla   jit(lax.top_k(u @ V.T, k)) — the classic serving path;
+                  its traffic includes writing + re-reading the [B, N]
+                  score matrix
+      fused       one-pass Pallas kernel (scores never leave VMEM)
+      fused_int8  same, int8 item rows dequantized in-kernel
+    plus one codebook-expansion shape (fused_cb / fused_cb_int8) where
+    the [N, d] item matrix never materializes either.
+    """
+    from repro import embedding as E
+    shapes = shapes or FUSED_SHAPES
+    rng = np.random.default_rng(0)
+    records = []
+
+    def _time(fn, *args):
+        jax.block_until_ready(fn(*args))          # compile
+        t0 = time.time()
+        for _ in range(repeats):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / repeats * 1e6
+
+    def _record(variant, b, n, d, k, us, bytes_moved, dense_us):
+        return {"variant": variant, "B": b, "N": n, "d": d, "K": k,
+                "us_per_call": round(us, 2), "bytes_moved": bytes_moved,
+                "achieved_gbps": round(bytes_moved / (us / 1e6) / 1e9, 4),
+                "speedup_vs_dense_xla": round(dense_us / us, 3)}
+
+    for (b, n, d, k) in shapes:
+        u = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        q, scale = E.quantize_int8_rows(np.asarray(v))
+        q, scale = jnp.asarray(q), jnp.asarray(scale)
+        base = b * d * 4 + b * k * 8              # users in, (vals, ids) out
+
+        dense_fn = jax.jit(lambda u, v, k=k: jax.lax.top_k(u @ v.T, k))
+        fused_fn = jax.jit(lambda u, v, k=k: E.fused_topk(u, v, k))
+        int8_fn = jax.jit(lambda u, q, s, k=k: E.fused_topk(u, q, k,
+                                                            scale=s))
+        dense_us = _time(dense_fn, u, v)
+        records.append(_record("dense_xla", b, n, d, k, dense_us,
+                               base + n * d * 4 + 2 * b * n * 4, dense_us))
+        records.append(_record("fused", b, n, d, k,
+                               _time(fused_fn, u, v),
+                               base + n * d * 4, dense_us))
+        records.append(_record("fused_int8", b, n, d, k,
+                               _time(int8_fn, u, q, scale),
+                               base + n * d + n * 4, dense_us))
+
+    if cb_shape is not None:
+        b, n, d, k, kr, h = cb_shape
+        u = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+        cb = jnp.asarray(rng.standard_normal((kr, d)), jnp.float32)
+        sk = jnp.asarray(rng.integers(0, kr, (n, h)), jnp.int32)
+        q, scale = E.quantize_int8_rows(np.asarray(cb))
+        q, scale = jnp.asarray(q), jnp.asarray(scale)
+        base = b * d * 4 + b * k * 8 + n * h * 4          # + sketch reads
+        dense_fn = jax.jit(lambda u, cb, sk, k=k: jax.lax.top_k(
+            u @ ref.expand_items(cb, sketch=sk).T, k))
+        cb_fn = jax.jit(lambda u, cb, sk, k=k: E.fused_topk(
+            u, cb, k, sketch=sk))
+        cb8_fn = jax.jit(lambda u, q, sk, s, k=k: E.fused_topk(
+            u, q, k, sketch=sk, scale=s))
+        reps = repeats if jax.default_backend() == "tpu" else 1
+        dense_us = _time(dense_fn, u, cb, sk)
+        records.append(_record("dense_xla_cb", b, n, d, k, dense_us,
+                               base + n * h * d * 4 + 2 * n * d * 4
+                               + 2 * b * n * 4, dense_us))
+        old, repeats = repeats, reps
+        records.append(_record("fused_cb", b, n, d, k,
+                               _time(cb_fn, u, cb, sk),
+                               base + n * h * d * 4, dense_us))
+        records.append(_record("fused_cb_int8", b, n, d, k,
+                               _time(cb8_fn, u, q, sk, scale),
+                               base + n * h * (d + 4), dense_us))
+        repeats = old
     return records
 
 
@@ -134,9 +233,10 @@ def main(argv=None):
                     help="full (slow) shapes for the classic kernel bench")
     args = ap.parse_args(argv)
     if args.json:
-        record = {"bench": "codebook_lookup_backends",
+        record = {"bench": "kernel",
                   "platform": jax.default_backend(),
-                  "records": bench_backends()}
+                  "codebook_lookup": bench_backends(),
+                  "fused": bench_fused()}
         text = json.dumps(record, indent=2)
         print(text)
         if args.out:

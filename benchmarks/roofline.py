@@ -12,6 +12,15 @@ trip-count-exact). MODEL_FLOPS uses the 6*N*D rule (dense) or
 Usage:
   python -m benchmarks.roofline --results dryrun_single_pod.json
   python -m benchmarks.roofline --cell gemma2-9b:train_4k   (live lower)
+  python -m benchmarks.roofline --serving BENCH_kernel.json
+
+``--serving`` places the fused serving-scorer sweep (written by
+``kernel_bench.py --json``) against the HBM roofline: the fused kernel
+is pure memory traffic at serving arithmetic intensities, so its bound
+is simply bytes_moved / HBM_BW, and the %roof column is the fraction of
+peak HBM bandwidth actually achieved. Only meaningful when the record
+was produced on a TPU — off-TPU records (Pallas interpret mode) get a
+caveat instead of a verdict.
 """
 from __future__ import annotations
 
@@ -24,7 +33,8 @@ PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s
 LINK_BW = 50e9             # bytes/s ICI
 
-__all__ = ["roofline_terms", "model_flops", "print_table"]
+__all__ = ["roofline_terms", "model_flops", "print_table",
+           "serving_roofline", "print_serving_table"]
 
 
 def model_flops(arch_id: str, shape_name: str, kind: str) -> float:
@@ -173,11 +183,86 @@ def print_table(results, chips=256):
     return rows
 
 
+def serving_roofline(fused_records, peak_bw: float = HBM_BW):
+    """Roofline terms for the fused serving-scorer sweep.
+
+    Each record from ``kernel_bench.bench_fused`` carries its analytic
+    ``bytes_moved`` and measured ``us_per_call``; the serving kernel
+    streams the item table once per call with O(B*k) compute per tile,
+    so the memory term is the whole roofline:
+
+      bound_us      bytes_moved / peak_bw — the floor wall-time if the
+                    kernel ran at peak HBM bandwidth
+      achieved_gbps bytes_moved / us_per_call
+      hbm_frac      achieved bandwidth / peak — how far from the roof
+
+    Returns one dict per input record (records without timings are
+    passed through unchanged so bench errors stay visible)."""
+    out = []
+    for rec in fused_records:
+        if not isinstance(rec, dict) or "us_per_call" not in rec:
+            out.append(dict(rec) if isinstance(rec, dict) else
+                       {"error": repr(rec)})
+            continue
+        us = float(rec["us_per_call"])
+        nbytes = float(rec["bytes_moved"])
+        bound_us = nbytes / peak_bw * 1e6
+        achieved = nbytes / (us / 1e6)
+        out.append({
+            "variant": rec["variant"], "B": rec["B"], "N": rec["N"],
+            "d": rec["d"], "K": rec["K"], "us_per_call": us,
+            "bound_us": round(bound_us, 3),
+            "achieved_gbps": round(achieved / 1e9, 4),
+            "hbm_frac": round(achieved / peak_bw, 6),
+            "speedup_vs_dense_xla": rec.get("speedup_vs_dense_xla"),
+        })
+    return out
+
+
+def print_serving_table(record: dict, peak_bw: float = HBM_BW):
+    """Render the fused sweep of a BENCH_kernel.json record against the
+    HBM roofline."""
+    platform = record.get("platform", "?")
+    rows = serving_roofline(record.get("fused", []), peak_bw)
+    hdr = (f"{'variant':14s} {'B':>5s} {'N':>7s} {'d':>4s} {'K':>4s} "
+           f"{'us':>11s} {'bound_us':>9s} {'GB/s':>9s} {'%roof':>7s} "
+           f"{'vs_dense':>9s}")
+    print(f"serving roofline vs HBM peak {peak_bw/1e9:.0f} GB/s "
+          f"(platform: {platform})")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if "us_per_call" not in r:
+            print(f"{r.get('variant', '?'):14s} "
+                  f"error: {r.get('error', '?')[:48]}")
+            continue
+        sp = r["speedup_vs_dense_xla"]
+        print(f"{r['variant']:14s} {r['B']:5d} {r['N']:7d} {r['d']:4d} "
+              f"{r['K']:4d} {r['us_per_call']:11.1f} {r['bound_us']:9.3f} "
+              f"{r['achieved_gbps']:9.3f} {100*r['hbm_frac']:6.2f}% "
+              f"{(f'{sp:.2f}x' if sp is not None else '-'):>9s}")
+    if platform != "tpu":
+        print(f"NOTE: record was produced on {platform!r} — Pallas runs "
+              f"in interpret mode there, so %roof against the TPU HBM "
+              f"bound is not a perf verdict; re-run kernel_bench.py "
+              f"--json on a TPU to measure.")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="dryrun_single_pod.json")
     ap.add_argument("--cell", default=None, help="arch:shape (live lower)")
+    ap.add_argument("--serving", default=None, metavar="BENCH_KERNEL_JSON",
+                    help="render the fused serving sweep of a "
+                         "BENCH_kernel.json record against the HBM "
+                         "roofline")
     args = ap.parse_args(argv)
+    if args.serving:
+        with open(args.serving) as f:
+            record = json.load(f)
+        print_serving_table(record)
+        return 0
     if args.cell:
         import os
         os.environ["XLA_FLAGS"] = \

@@ -1,11 +1,16 @@
 from .engine import (EmbeddingEngine, EmbeddingSpec, LookupBackend,
-                     available_backends, embedding_lookup, get_backend,
-                     normalize_backend, register_backend)
+                     available_backends, available_scorers, embedding_lookup,
+                     fused_topk, get_backend, get_scorer, normalize_backend,
+                     register_backend, register_scorer)
+from .quantize import (dequantize_int8_rows, dequantize_params,
+                       params_quantized, quantize_int8_rows, quantize_params)
 from .tables import (init_embedding, embed_lookup, init_codebook,
                      codebook_lookup, embedding_bag)
 
 __all__ = ["EmbeddingSpec", "EmbeddingEngine", "LookupBackend",
-           "available_backends", "embedding_lookup", "get_backend",
-           "normalize_backend", "register_backend", "init_embedding",
+           "available_backends", "available_scorers", "embedding_lookup",
+           "fused_topk", "get_backend", "get_scorer", "normalize_backend",
+           "register_backend", "register_scorer", "init_embedding",
            "embed_lookup", "init_codebook", "codebook_lookup",
-           "embedding_bag"]
+           "embedding_bag", "quantize_int8_rows", "dequantize_int8_rows",
+           "quantize_params", "dequantize_params", "params_quantized"]

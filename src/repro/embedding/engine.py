@@ -30,7 +30,7 @@ be overridden per call site — configs thread a `lookup_backend` field,
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +38,8 @@ import jax.numpy as jnp
 __all__ = ["EmbeddingSpec", "EmbeddingEngine", "LookupBackend",
            "register_backend", "get_backend", "available_backends",
            "normalize_backend", "dedup_keep_mask", "embedding_lookup",
-           "ONEHOT_MAX_ROWS"]
+           "register_scorer", "get_scorer", "available_scorers",
+           "fused_topk", "ONEHOT_MAX_ROWS"]
 
 # Below this codebook size the one-hot matmul fits comfortably in VMEM and
 # trades a gather (slow on the VPU) for an MXU GEMM.
@@ -162,6 +163,56 @@ def normalize_backend(name: Optional[str]) -> Optional[str]:
         return None
     get_backend(name)           # raises KeyError for unknown names
     return name
+
+
+# ---------------------------------------------------------------------------
+# fused scorer registry (lookup -> score -> top-k in one pass)
+# ---------------------------------------------------------------------------
+# Scorers live beside the lookup backends because they are the same
+# dispatch problem one level up: serving code (repro.serve) reaches ALL
+# table-touching compute through this module — the arch tests grep-ban
+# direct repro.kernels imports outside the embedding layer. The "pallas"
+# scorer is registered by repro.kernels.ops on the same deferred import
+# as the "pallas" lookup backend; "ref" is its pure-jnp twin.
+_SCORERS: Dict[str, Any] = {}
+
+
+def register_scorer(name: str, fn) -> None:
+    _SCORERS[name] = fn
+
+
+def get_scorer(name: str):
+    _ensure_registered()
+    if name not in _SCORERS:
+        raise KeyError(f"unknown fused scorer {name!r}; "
+                       f"registered: {sorted(_SCORERS)}")
+    return _SCORERS[name]
+
+
+def available_scorers():
+    _ensure_registered()
+    return tuple(sorted(_SCORERS))
+
+
+def fused_topk(u, items, k, *, sketch=None, scale=None, mask=None,
+               exclude=None, block=512, backend=None, interpret=None):
+    """One-pass gather -> score -> top-k over the item axis.
+
+    Returns ``(values [B, k] f32, ids [B, k] int32)`` equal to
+    ``lax.top_k(u @ V.T + mask, k)`` where ``V`` is ``items`` [N, d]
+    directly, or the codebook expansion ``Σ_h items[sketch[:, h]]``
+    (binary-Y dedup) when ``sketch`` [N, H] is given — without ever
+    materializing the [B, N] score matrix (backend "pallas", the
+    default) . int8 ``items`` rows dequantize in-kernel through the
+    per-row fp32 ``scale``. ``exclude`` is a host (rows, cols) pair
+    scattered to -inf. Tie-break matches lax.top_k: lowest item id
+    among equal values.
+    """
+    _ensure_registered()
+    name = "pallas" if backend in (None, "auto") else str(backend)
+    return get_scorer(name)(u, items, k, sketch=sketch, scale=scale,
+                            mask=mask, exclude=exclude, block=block,
+                            interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,65 @@
+"""int8 symmetric per-row table quantization (serving footprint rung 2).
+
+Co-clustering compresses the table to a codebook; this module drops
+another ~4x by storing codebook/table rows as int8 with one fp32 scale
+per row:
+
+    scale_r = max|x_r| / 127        (clamped away from zero)
+    q_r     = clip(round(x_r / scale_r), -127, 127)
+
+Symmetric, zero-point-free — dequantization is a single fused
+multiply (``q.astype(f32) * scale``), cheap enough to run per-row
+inside a Pallas scoring kernel or per-table inside a jitted scorer.
+Elementwise round-trip error is bounded by ``scale_r / 2``.
+
+Param-dict convention (shared by ``CompressedArtifact.quantize`` and
+``RecsysSession``): a quantized params dict carries
+``{name}_q`` int8 [R, d] and ``{name}_scale`` f32 [R] in place of each
+fp32 ``{name}`` table; ``dequantize_params`` is trace-safe and a
+pass-through for fp32 dicts, so one jitted scorer serves both.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["quantize_int8_rows", "dequantize_int8_rows",
+           "quantize_params", "dequantize_params", "params_quantized"]
+
+_TABLE_NAMES = ("user_table", "item_table")
+
+
+def quantize_int8_rows(x):
+    """x [R, d] float -> (q int8 [R, d], scale f32 [R]). Host numpy."""
+    x = np.asarray(x, np.float32)
+    scale = np.maximum(np.abs(x).max(axis=1), 1e-12) / 127.0
+    q = np.clip(np.rint(x / scale[:, None]), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+def dequantize_int8_rows(q, scale):
+    """Inverse of ``quantize_int8_rows`` (trace-safe jnp)."""
+    return jnp.asarray(q).astype(jnp.float32) * jnp.asarray(scale)[:, None]
+
+
+def quantize_params(params) -> dict:
+    """{"user_table","item_table"} fp32 -> the int8 payload dict."""
+    out = {}
+    for name in _TABLE_NAMES:
+        q, scale = quantize_int8_rows(params[name])
+        out[name + "_q"] = q
+        out[name + "_scale"] = scale
+    return out
+
+
+def params_quantized(params) -> bool:
+    return _TABLE_NAMES[0] + "_q" in params
+
+
+def dequantize_params(params):
+    """int8 payload -> fp32 tables; fp32 params pass through untouched."""
+    if not params_quantized(params):
+        return params
+    return {name: dequantize_int8_rows(params[name + "_q"],
+                                       params[name + "_scale"])
+            for name in _TABLE_NAMES}

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .platform import resolve_interpret
+
 __all__ = ["codebook_lookup_pallas"]
 
 
@@ -54,16 +56,29 @@ def _kernel(idx_ref, row_ref, out_ref, *, n_hot: int, rows_per_step: int,
     out_ref[r, :] += contrib
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("binary", "rows_per_step", "interpret"))
 def codebook_lookup_pallas(codebook, idx, *, binary: bool = False,
-                           rows_per_step: int = 8, interpret: bool = True):
+                           rows_per_step: int = 8, interpret=None):
     """codebook [K, d], idx int32 [B, H] -> [B, d].
 
     The H row-blocks of each output row are prefetched via the scalar idx
     so the DMA pipeline overlaps fetch (row i+1, h) with compute of row i;
     rows_per_step output rows share one VMEM-resident output block.
+
+    ``interpret=None`` resolves per call — compile on TPU, interpret
+    everywhere else, REPRO_PALLAS_INTERPRET overrides (the old signature
+    hardwired ``interpret=True``, silently interpreting on accelerators).
+    Resolution happens OUTSIDE the jitted impl so the env override is
+    honored even after the program cache is warm.
     """
+    return _codebook_lookup_jit(codebook, idx, binary=binary,
+                                rows_per_step=rows_per_step,
+                                interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("binary", "rows_per_step", "interpret"))
+def _codebook_lookup_jit(codebook, idx, *, binary: bool,
+                         rows_per_step: int, interpret: bool):
     b, h = idx.shape
     k, d = codebook.shape
     r = max(1, min(rows_per_step, b))

@@ -1,0 +1,356 @@
+"""Pallas TPU kernel: fused gather -> score -> top-k in one VMEM pass.
+
+ROADMAP item 3: the serving hot path previously ran three programs —
+engine lookup, a dense ``u @ V.T`` over every item, and ``lax.top_k``
+over the full ``[B, n_items]`` score matrix. This kernel streams the
+item side through VMEM in fixed tiles and maintains a running per-user
+top-k (values, ids) across tiles, so the ``[B, n_items]`` score matrix
+never exists — peak memory is O(B x tile + B x k), independent of the
+item count.
+
+Two variants share the merge machinery:
+
+* ``fused_topk_pallas`` — items are an explicit ``[N, d]`` matrix
+  (propagated LightGCN embeddings, or a raw table). Grid ``(N/tile,)``;
+  per step one item tile is DMA'd to VMEM, scored against the resident
+  ``[B, d]`` user block, masked, and merged into the running top-k.
+* ``fused_topk_codebook_pallas`` — items are implicit:
+  ``v_i = Σ_h Z[sketch[i, h]]`` (binary-Y dedup, paper §3.2). This
+  extends the PR 1 ``codebook_lookup`` tiling through the readout: grid
+  ``(N/tile, tile, H)``, scalar-prefetched sketch indices drive a
+  one-row-per-step DMA into a VMEM ``[tile, d]`` scratch accumulator,
+  and the tile's last step scores + merges — expansion, scoring and
+  selection in a single kernel, one HBM read per codebook row touched.
+
+Both accept an int8 symmetric per-row quantized table/codebook with an
+fp32 scale vector; rows are dequantized in-kernel
+(``q.astype(f32) * scale``), so the HBM traffic is the int8 bytes.
+
+Tie-break contract: identical to ``jax.lax.top_k`` — highest value
+first, lowest index among equal values. The selection is k unrolled
+rounds of masked first-occurrence argmax (Mosaic has no sort/top_k
+primitive), and the cross-tile merge concatenates the running carry
+BEFORE the new tile so earlier (lower-id) candidates keep winning ties.
+One carve-out: equality is IEEE (-0.0 == +0.0), whereas lax.top_k's
+total order ranks +0.0 above -0.0 — scores that differ only in zero
+sign may order differently. Dot-product scores hit this with measure
+zero, and the mask add (+0.0) normalizes -0.0 away on the masked paths.
+
+Exclusion pairs ((row, item) scattered to -inf in-tile) use a jnp
+scatter, which Mosaic cannot lower — the exclusion path is
+interpret-mode only (eval uses it; serving masks via ``mask``, which
+compiles). ``kernels/ops.py`` routes around this automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_topk_pallas", "fused_topk_codebook_pallas",
+           "select_topk", "exclusion_tiles"]
+
+_NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# in-kernel top-k selection + cross-tile merge
+# ---------------------------------------------------------------------------
+def select_topk(scores, ids, k: int):
+    """Row-wise top-k of ``scores`` [B, C] carrying ``ids`` [B, C].
+
+    k unrolled rounds of masked argmax; among equal values the LOWEST
+    position wins — bitwise the same (values, ids) as
+    ``lax.top_k(scores, k)`` + gather of ``ids``, but built from
+    max/min/where reductions only so it lowers under Mosaic. Requires
+    C >= k. Rows with fewer than k finite entries fill with the
+    lowest-position -inf candidates (exactly like lax.top_k).
+    """
+    b, c = scores.shape
+    if c < k:
+        raise ValueError(f"select_topk needs >= k={k} candidates, got {c}")
+    pos = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1)
+    taken = jnp.zeros((b, c), jnp.bool_)
+    vals, out_ids = [], []
+    for _ in range(k):
+        live = jnp.where(taken, _NEG_INF, scores)
+        m = jnp.max(live, axis=1, keepdims=True)
+        # every untaken slot is a hit when the row max is -inf: the
+        # first-position rule then picks the earliest leftover candidate
+        hit = jnp.logical_and(jnp.logical_or(live == m, m == _NEG_INF),
+                              jnp.logical_not(taken))
+        first = jnp.min(jnp.where(hit, pos, c), axis=1, keepdims=True)
+        sel = pos == first
+        vals.append(jnp.max(jnp.where(sel, scores, _NEG_INF), axis=1))
+        out_ids.append(jnp.sum(jnp.where(sel, ids, 0), axis=1))
+        taken = jnp.logical_or(taken, sel)
+    return (jnp.stack(vals, axis=1),
+            jnp.stack(out_ids, axis=1).astype(jnp.int32))
+
+
+def _merge_tile(s, col_ids, vals_ref, ids_ref, k: int, is_first):
+    """Fold one tile of scores into the running (vals, ids) outputs.
+
+    The first tile selects from itself alone; later tiles concat the
+    carry FIRST so lower-id candidates from earlier tiles win ties —
+    together these make the running result bitwise what lax.top_k over
+    the full row would return.
+    """
+
+    @pl.when(is_first)
+    def _():
+        v, i = select_topk(s, col_ids, k)
+        vals_ref[...] = v
+        ids_ref[...] = i
+
+    @pl.when(jnp.logical_not(is_first))
+    def _():
+        cv = jnp.concatenate([vals_ref[...], s], axis=1)
+        ci = jnp.concatenate([ids_ref[...], col_ids], axis=1)
+        v, i = select_topk(cv, ci, k)
+        vals_ref[...] = v
+        ids_ref[...] = i
+
+
+# ---------------------------------------------------------------------------
+# host-side exclusion bucketing (one padded (rows, cols) pair per tile)
+# ---------------------------------------------------------------------------
+def exclusion_tiles(exclude, nb: int, tile: int, row_sentinel: int):
+    """Bucket global (row, item) exclusion pairs per item tile.
+
+    Returns int32 ``(ex_r, ex_c)`` of shape [nb, E] (E = max bucket
+    size, >= 1): tile-local column ids, padded with an out-of-range row
+    sentinel that a ``mode="drop"`` scatter ignores. Host-only — the
+    pairs must be concrete arrays, not tracers.
+    """
+    rows = np.asarray(exclude[0], dtype=np.int32)
+    cols = np.asarray(exclude[1], dtype=np.int32)
+    if rows.size == 0:
+        return (np.full((nb, 1), row_sentinel, np.int32),
+                np.zeros((nb, 1), np.int32))
+    order = np.argsort(cols, kind="stable")
+    rows, cols = rows[order], cols[order]
+    bounds = np.searchsorted(cols, np.arange(nb + 1, dtype=np.int64) * tile)
+    emax = max(1, int(np.max(np.diff(bounds))))
+    ex_r = np.full((nb, emax), row_sentinel, dtype=np.int32)
+    ex_c = np.zeros((nb, emax), dtype=np.int32)
+    for b in range(nb):
+        lo, hi = int(bounds[b]), int(bounds[b + 1])
+        ex_r[b, :hi - lo] = rows[lo:hi]
+        ex_c[b, :hi - lo] = cols[lo:hi] - b * tile
+    return ex_r, ex_c
+
+
+def _tile_plan(n: int, k: int, block: int):
+    if k > n:
+        raise ValueError(f"k={k} exceeds n_items={n}")
+    tile = int(min(max(block, k), n))
+    nb = -(-n // tile)
+    return tile, nb, nb * tile - n
+
+
+def _full_mask(mask, n: int, pad: int):
+    m = (jnp.zeros((n,), jnp.float32) if mask is None
+         else jnp.asarray(mask, jnp.float32))
+    if pad:
+        m = jnp.concatenate([m, jnp.full((pad,), _NEG_INF, jnp.float32)])
+    return m.reshape(1, -1)
+
+
+# ---------------------------------------------------------------------------
+# dense variant: explicit [N, d] item matrix
+# ---------------------------------------------------------------------------
+def _dense_kernel(*refs, k: int, tile: int, quantized: bool, excl: bool):
+    it = iter(refs)
+    u_ref, v_ref = next(it), next(it)
+    scale_ref = next(it) if quantized else None
+    mask_ref = next(it)
+    exr_ref = next(it) if excl else None
+    exc_ref = next(it) if excl else None
+    vals_ref, ids_ref = next(it), next(it)
+
+    t = pl.program_id(0)
+    v = v_ref[...]
+    if quantized:
+        v = v.astype(jnp.float32) * scale_ref[...]
+    s = jnp.dot(u_ref[...], v.T, preferred_element_type=jnp.float32)
+    s = s + mask_ref[0, :][None, :]
+    if excl:
+        s = s.at[exr_ref[0], exc_ref[0]].set(_NEG_INF, mode="drop")
+    col = t * tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    _merge_tile(s, col, vals_ref, ids_ref, k, t == 0)
+
+
+def fused_topk_pallas(u, items, k: int, *, scale=None, mask=None,
+                      exclude=None, block: int = 512,
+                      interpret: bool = True):
+    """``lax.top_k(u @ items.T + mask, k)`` without the score matrix.
+
+    u [B, d] f32; items [N, d] f32, or int8 with ``scale`` f32 [N]
+    (dequantized in-kernel). ``mask`` f32 [N] is added to every row
+    (e.g. the capacity ladder's -inf pad mask); ``exclude`` is a host
+    (rows, cols) pair scattered to -inf (interpret-mode only). Returns
+    (values [B, k] f32, ids [B, k] int32) with lax.top_k tie-breaking.
+    """
+    k = int(k)
+    u = jnp.asarray(u, jnp.float32)
+    b, d = u.shape
+    n = items.shape[0]
+    tile, nb, pad = _tile_plan(n, k, int(block))
+    m = _full_mask(mask, n, pad)
+    v = jnp.asarray(items)
+    if pad:
+        v = jnp.concatenate([v, jnp.zeros((pad, d), v.dtype)])
+    quantized = scale is not None
+    excl = exclude is not None
+
+    in_specs = [pl.BlockSpec((b, d), lambda t: (0, 0)),
+                pl.BlockSpec((tile, d), lambda t: (t, 0))]
+    args = [u, v]
+    if quantized:
+        sc = jnp.asarray(scale, jnp.float32).reshape(-1, 1)
+        if pad:
+            sc = jnp.concatenate([sc, jnp.zeros((pad, 1), jnp.float32)])
+        in_specs.append(pl.BlockSpec((tile, 1), lambda t: (t, 0)))
+        args.append(sc)
+    in_specs.append(pl.BlockSpec((1, tile), lambda t: (0, t)))
+    args.append(m)
+    if excl:
+        ex_r, ex_c = exclusion_tiles(exclude, nb, tile, row_sentinel=b)
+        e = ex_r.shape[1]
+        in_specs += [pl.BlockSpec((1, e), lambda t: (t, 0)),
+                     pl.BlockSpec((1, e), lambda t: (t, 0))]
+        args += [jnp.asarray(ex_r), jnp.asarray(ex_c)]
+
+    fn = pl.pallas_call(
+        functools.partial(_dense_kernel, k=k, tile=tile,
+                          quantized=quantized, excl=excl),
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((b, k), lambda t: (0, 0)),
+                   pl.BlockSpec((b, k), lambda t: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k), jnp.int32)],
+        interpret=interpret,
+    )
+    vals, ids = fn(*args)
+    return vals, ids
+
+
+# ---------------------------------------------------------------------------
+# codebook variant: items expanded through the sketch, in-kernel
+# ---------------------------------------------------------------------------
+def _codebook_kernel(sk_ref, *refs, k: int, tile: int, n_hot: int,
+                     quantized: bool, excl: bool):
+    it = iter(refs)
+    u_ref, row_ref = next(it), next(it)
+    scale_ref = next(it) if quantized else None
+    mask_ref = next(it)
+    exr_ref = next(it) if excl else None
+    exc_ref = next(it) if excl else None
+    vals_ref, ids_ref, vtile_ref = next(it), next(it), next(it)
+
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+    hh = pl.program_id(2)
+
+    contrib = row_ref[0, :].astype(jnp.float32)
+    if quantized:
+        contrib = contrib * scale_ref[0, 0]
+    if n_hot > 1:            # binary-Y dedup via the prefetched scalars
+        item = t * tile + j
+        cur = sk_ref[item, hh]
+        dup = jnp.zeros((), jnp.bool_)
+        for jj in range(n_hot - 1):          # jj < hh <= n_hot-1
+            dup = dup | ((jj < hh) & (sk_ref[item, jj] == cur))
+        contrib = jnp.where(dup, jnp.zeros_like(contrib), contrib)
+
+    @pl.when(hh == 0)
+    def _():
+        vtile_ref[j, :] = contrib
+
+    @pl.when(hh != 0)
+    def _():
+        vtile_ref[j, :] = vtile_ref[j, :] + contrib
+
+    # tile fully expanded in VMEM scratch: score + merge, once per tile
+    @pl.when(jnp.logical_and(j == tile - 1, hh == n_hot - 1))
+    def _():
+        s = jnp.dot(u_ref[...], vtile_ref[...].T,
+                    preferred_element_type=jnp.float32)
+        s = s + mask_ref[0, :][None, :]
+        if excl:
+            s = s.at[exr_ref[0], exc_ref[0]].set(_NEG_INF, mode="drop")
+        col = t * tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _merge_tile(s, col, vals_ref, ids_ref, k, t == 0)
+
+
+def fused_topk_codebook_pallas(u, codebook, sketch, k: int, *, scale=None,
+                               mask=None, exclude=None, block: int = 128,
+                               interpret: bool = True):
+    """Fused codebook expansion -> score -> top-k.
+
+    u [B, d] f32; codebook [K, d] f32 or int8 with ``scale`` f32 [K];
+    sketch int32 [N, H]. Item i scores as
+    ``u . Σ_h dedup(Z[sketch[i, h]])`` — the expanded [N, d] item table
+    never materializes: each tile of ``tile`` item rows is accumulated
+    into VMEM scratch one codebook row per grid step (scalar-prefetched
+    DMA, exactly the ``codebook_lookup`` pipeline) and scored in place.
+    Same mask/exclude/tie-break contract as ``fused_topk_pallas``.
+    """
+    k = int(k)
+    u = jnp.asarray(u, jnp.float32)
+    b, d = u.shape
+    sketch = jnp.asarray(sketch, jnp.int32)
+    n, h = sketch.shape
+    tile, nb, pad = _tile_plan(n, k, int(block))
+    m = _full_mask(mask, n, pad)
+    if pad:                 # pad rows expand row 0 but score -inf via mask
+        sketch = jnp.concatenate(
+            [sketch, jnp.zeros((pad, h), jnp.int32)])
+    quantized = scale is not None
+    excl = exclude is not None
+
+    in_specs = [
+        pl.BlockSpec((b, d), lambda t, j, hh, sk: (0, 0)),
+        pl.BlockSpec((1, d), functools.partial(
+            lambda t, j, hh, sk, tile_: (sk[t * tile_ + j, hh], 0),
+            tile_=tile)),
+    ]
+    args = [codebook]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1), functools.partial(
+            lambda t, j, hh, sk, tile_: (sk[t * tile_ + j, hh], 0),
+            tile_=tile)))
+        args.append(jnp.asarray(scale, jnp.float32).reshape(-1, 1))
+    in_specs.append(pl.BlockSpec((1, tile), lambda t, j, hh, sk: (0, t)))
+    args.append(m)
+    if excl:
+        ex_r, ex_c = exclusion_tiles(exclude, nb, tile, row_sentinel=b)
+        e = ex_r.shape[1]
+        in_specs += [pl.BlockSpec((1, e), lambda t, j, hh, sk: (t, 0)),
+                     pl.BlockSpec((1, e), lambda t, j, hh, sk: (t, 0))]
+        args += [jnp.asarray(ex_r), jnp.asarray(ex_c)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, tile, h),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((b, k), lambda t, j, hh, sk: (0, 0)),
+                   pl.BlockSpec((b, k), lambda t, j, hh, sk: (0, 0))],
+        scratch_shapes=[pltpu.VMEM((tile, d), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_codebook_kernel, k=k, tile=tile, n_hot=h,
+                          quantized=quantized, excl=excl),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k), jnp.int32)],
+        interpret=interpret,
+    )
+    vals, ids = fn(sketch, u, *args)
+    return vals, ids

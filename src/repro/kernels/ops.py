@@ -15,28 +15,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.embedding.engine import (LookupBackend, bag_combine,
-                                    register_backend)
+                                    register_backend, register_scorer)
 
+from . import ref
 from .codebook_lookup import codebook_lookup_pallas
 from .embedding_bag import embedding_bag_pallas
 from .dot_interaction import dot_interaction_pallas
 from .flash_attention import flash_attention_pallas
+from .fused_topk import fused_topk_codebook_pallas, fused_topk_pallas
+from .platform import resolve_interpret as _interpret
 
 __all__ = ["codebook_lookup", "embedding_bag", "dot_interaction",
-           "flash_attention", "PallasBackend"]
-
-
-def _interpret(override):
-    if override is not None:
-        return override
-    return jax.default_backend() != "tpu"
+           "flash_attention", "fused_topk", "PallasBackend"]
 
 
 def codebook_lookup(codebook, idx, *, binary=False, rows_per_step=8,
                     interpret=None):
     return codebook_lookup_pallas(codebook, idx, binary=binary,
                                   rows_per_step=rows_per_step,
-                                  interpret=_interpret(interpret))
+                                  interpret=interpret)
 
 
 def embedding_bag(table, values, segment_ids, num_segments, *,
@@ -56,6 +53,41 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
     return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
                                   block_k=block_k,
                                   interpret=_interpret(interpret))
+
+
+def fused_topk(u, items, k, *, sketch=None, scale=None, mask=None,
+               exclude=None, block=512, interpret=None):
+    """The "pallas" fused scorer (see repro.embedding.fused_topk for the
+    dispatching public entry). Serving-forward only — no VJP.
+
+    The exclusion scatter inside the kernel does not lower under Mosaic;
+    when exclusions are requested on a compiled platform the call falls
+    through to the jnp reference twin (eval-only path — serving excludes
+    nothing and masks via ``mask``, which compiles)."""
+    interpret = _interpret(interpret)
+    has_excl = exclude is not None and len(exclude[0]) > 0
+    if has_excl and not interpret:
+        return ref.fused_topk(u, items, k, sketch=sketch, scale=scale,
+                              mask=mask, exclude=exclude)
+    excl = exclude if has_excl else None
+    if sketch is not None:
+        return fused_topk_codebook_pallas(u, items, sketch, k, scale=scale,
+                                          mask=mask, exclude=excl,
+                                          block=min(int(block), 512),
+                                          interpret=interpret)
+    return fused_topk_pallas(u, items, k, scale=scale, mask=mask,
+                             exclude=excl, block=block, interpret=interpret)
+
+
+def _fused_topk_ref(u, items, k, *, sketch=None, scale=None, mask=None,
+                    exclude=None, block=None, interpret=None):
+    # block/interpret are dispatch-level knobs with no meaning here
+    return ref.fused_topk(u, items, k, sketch=sketch, scale=scale,
+                          mask=mask, exclude=exclude)
+
+
+register_scorer("pallas", fused_topk)
+register_scorer("ref", _fused_topk_ref)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,32 @@
+"""Platform-aware interpret/compile selection for every Pallas kernel.
+
+On TPU the kernels compile through Mosaic; everywhere else (this CPU CI
+container, GPU) they run in Pallas interpret mode — a correctness
+fallback, not a perf path. Resolution order:
+
+    explicit kwarg  >  REPRO_PALLAS_INTERPRET env  >  platform default
+
+The env override exists so CI can force either mode without touching
+call sites (e.g. ``REPRO_PALLAS_INTERPRET=1`` to smoke the interpret
+path on an accelerator image).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["resolve_interpret"]
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+_FALSY = ("0", "false", "False", "no", "off")
+
+
+def resolve_interpret(override=None) -> bool:
+    """True -> run the kernel interpreted; False -> compile (Mosaic)."""
+    if override is not None:
+        return bool(override)
+    env = os.environ.get(_ENV)
+    if env is not None and env != "":
+        return env not in _FALSY
+    return jax.default_backend() != "tpu"

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["codebook_lookup", "codebook_lookup_dedup", "embedding_bag",
-           "dot_interaction", "mha"]
+           "dot_interaction", "mha", "expand_items", "fused_topk"]
 
 
 def codebook_lookup(codebook, idx):
@@ -39,6 +39,51 @@ def dot_interaction(z):
     f = z.shape[1]
     i, j = np.tril_indices(f, k=-1)
     return inter[:, i, j]
+
+
+def expand_items(items, sketch=None, scale=None):
+    """The item matrix the fused top-k kernel scores against, explicit.
+
+    items [N, d] (or a codebook [K, d] when ``sketch`` [N, H] is given —
+    rows expand as Σ_h Z[sketch[i, h]] with the binary-Y dedup rule);
+    int8 rows are dequantized first via the per-row ``scale``.
+    """
+    v = jnp.asarray(items)
+    if scale is not None:
+        v = v.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)[:, None]
+    else:
+        v = v.astype(jnp.float32)
+    if sketch is not None:
+        from repro.embedding.engine import dedup_keep_mask
+        sketch = jnp.asarray(sketch, jnp.int32)
+        rows = jnp.take(v, sketch, axis=0)                 # [N, H, d]
+        keep = (dedup_keep_mask(sketch) if sketch.shape[-1] > 1
+                else jnp.ones(sketch.shape, bool))
+        v = jnp.where(keep[..., None], rows, 0).sum(axis=1)
+    return v
+
+
+def fused_topk(u, items, k, *, sketch=None, scale=None, mask=None,
+               exclude=None):
+    """Serving-forward oracle for kernels/fused_topk.py (no VJP).
+
+    Materializes the full [B, N] score matrix and selects with
+    ``lax.top_k`` — highest value first, lowest item id among equals.
+    That pair (values, ids) is the contract the fused kernel pins,
+    including rows with fewer than k scoreable items.
+    """
+    u = jnp.asarray(u, jnp.float32)
+    v = expand_items(items, sketch=sketch, scale=scale)
+    s = jnp.dot(u, v.T)
+    if mask is not None:
+        s = s + jnp.asarray(mask, jnp.float32)[None, :]
+    if exclude is not None:
+        rows = jnp.asarray(exclude[0], jnp.int32)
+        cols = jnp.asarray(exclude[1], jnp.int32)
+        if rows.size:
+            s = s.at[rows, cols].set(-jnp.inf, mode="drop")
+    vals, ids = jax.lax.top_k(s, int(k))
+    return vals, ids.astype(jnp.int32)
 
 
 def mha(q, k, v, causal=True):

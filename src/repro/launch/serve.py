@@ -10,7 +10,9 @@ latency plus compile-count telemetry.
 Every table lookup routes through the EmbeddingEngine; ``--backend``
 overrides the lookup backend recorded in the artifact ("gather" |
 "onehot" | "pallas"; "auto" keeps the artifact's choice) — see
-benchmarks/serve_bench.py --json for the measured sweep.
+benchmarks/serve_bench.py --json for the measured sweep. ``--scorer
+fused`` swaps the dense score-then-top_k readout for the one-pass
+fused Pallas scorer ("auto"/"dense" keep the default dense path).
 
 For the assigned archs, ``--arch <id> --shape serve_p99|decode_32k``
 serves the smoke-scale cell through ``ArchSession`` (full configs are
@@ -59,7 +61,8 @@ def paper_serving(args):
     art = _get_artifact(args)
     # "auto" -> None: keep the backend recorded in the artifact
     session = RecsysSession.from_artifact(
-        art, k=args.k, backend=normalize_backend(args.backend))
+        art, k=args.k, backend=normalize_backend(args.backend),
+        scorer=args.scorer)
     buckets = tuple(int(b) for b in args.buckets.split(","))
     disp = BatchDispatcher(session, buckets=buckets)
     disp.warmup()
@@ -119,6 +122,10 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "gather", "onehot", "pallas"],
                     help="EmbeddingEngine lookup backend override")
+    ap.add_argument("--scorer", default="auto",
+                    choices=["auto", "dense", "fused"],
+                    help="top-k readout: dense score-then-top_k (auto/"
+                         "dense) or the fused Pallas scorer")
     ap.add_argument("--cluster-solver", default="auto",
                     help="ClusterEngine solver for on-the-spot "
                          "compression: auto | jax | jax_sharded | numpy")

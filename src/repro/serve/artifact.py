@@ -61,6 +61,11 @@ class CompressedArtifact:
                 lookup_backend, ...)
     provenance: JSON scalars recording how the sketch was built (gamma,
                 solver, weight scheme, budget, method) + trainer info
+    quantized:  optional int8 payload from ``quantize()``:
+                ``{name}_q`` int8 rows + ``{name}_scale`` fp32 per-row
+                scale vector for each table. When set (and the fp32
+                params were dropped) sessions serve the int8 payload
+                and dequantize inside the jitted scorer.
     """
 
     params: Any
@@ -68,6 +73,7 @@ class CompressedArtifact:
     sketch: Optional[Sketch]
     model: dict
     provenance: dict
+    quantized: Optional[dict] = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -92,6 +98,33 @@ class CompressedArtifact:
                            "exported_by": "Trainer.export"})
         return cls(params=params, edges=edges, sketch=sketch, model=model,
                    provenance=provenance)
+
+    # -- int8 quantization (compression x quantization ladder) --------------
+    def quantize(self, keep_fp32: bool = False) -> "CompressedArtifact":
+        """int8 symmetric per-row quantized copy of this artifact.
+
+        The served tables shrink ~4x on top of the co-clustering
+        compression; ``RecsysSession`` dequantizes inside the jitted
+        scorer, so the device-resident state is the int8 payload. By
+        default the fp32 tables are DROPPED (that's the footprint win);
+        ``keep_fp32=True`` carries both, e.g. to delta against an fp32
+        base. Idempotent on already-quantized artifacts.
+        """
+        if self.quantized is not None:
+            return self
+        from repro.embedding import quantize_params
+        provenance = dict(self.provenance)
+        provenance["quantization"] = "int8_symmetric_rowwise"
+        return dataclasses.replace(
+            self, params=self.params if keep_fp32 else {},
+            quantized=quantize_params(self.params), provenance=provenance)
+
+    def serving_params(self) -> dict:
+        """What a session puts on device: the int8 payload when this
+        artifact is quantized (fp32 dropped), the fp32 tables otherwise."""
+        if self.quantized is not None and not self.params:
+            return dict(self.quantized)
+        return self.params
 
     # -- serving glue -------------------------------------------------------
     @property
@@ -119,24 +152,34 @@ class CompressedArtifact:
         return statics
 
     def session(self, k: int = 20, backend: Optional[str] = None,
-                capacity=None, telemetry=None):
+                capacity=None, telemetry=None, scorer: str = "dense"):
         """Convenience: a warmed-up-able RecsysSession over this bundle.
         Pass ``capacity`` ("auto" or a maxima dict) for a hot-swappable
-        session padded to the capacity ladder."""
+        session padded to the capacity ladder; ``scorer="fused"`` serves
+        through the one-pass Pallas top-k kernel."""
         from repro.serve.session import RecsysSession
         return RecsysSession.from_artifact(self, k=k, backend=backend,
                                            capacity=capacity,
-                                           telemetry=telemetry)
+                                           telemetry=telemetry,
+                                           scorer=scorer)
 
     def n_params(self) -> int:
         return sum(int(np.prod(p.shape)) for p in
-                   jax.tree.leaves(self.params))
+                   jax.tree.leaves((self.params, self.quantized)))
+
+    def serving_nbytes(self) -> int:
+        """Bytes of the device-resident table payload (the number the
+        int8 rung shrinks ~4x)."""
+        return int(sum(np.asarray(a).nbytes
+                       for a in jax.tree.leaves(self.serving_params())))
 
     # -- content addressing / deltas ----------------------------------------
     def _tree(self) -> dict:
         tree = {"params": self.params, "edges": self.edges}
         if self.sketch is not None:
             tree["sketch"] = self.sketch.state_arrays()
+        if self.quantized is not None:
+            tree["quantized"] = self.quantized
         return tree
 
     def _flat(self) -> dict:
@@ -209,9 +252,11 @@ class CompressedArtifact:
                 k_items=model["k_items"],
                 method=delta.provenance.get("method", "unknown"),
                 meta=dict(delta.provenance))
-        out = CompressedArtifact(params=tree["params"], edges=tree["edges"],
+        out = CompressedArtifact(params=tree.get("params", {}),
+                                 edges=tree["edges"],
                                  sketch=sketch, model=model,
-                                 provenance=dict(delta.provenance))
+                                 provenance=dict(delta.provenance),
+                                 quantized=tree.get("quantized"))
         got = out.content_id()
         if got != delta.new_id:
             raise ValueError(f"delta application produced {got}, "
@@ -250,9 +295,10 @@ class CompressedArtifact:
                 k_items=model["k_items"],
                 method=provenance.get("method", "unknown"),
                 meta=provenance)
-        return cls(params=tree["params"], edges=tree["edges"],
+        return cls(params=tree.get("params", {}), edges=tree["edges"],
                    sketch=sketch, model=dict(model),
-                   provenance=dict(provenance))
+                   provenance=dict(provenance),
+                   quantized=tree.get("quantized"))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,11 +30,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import pad_rung as _cap_rung
-from repro.embedding import normalize_backend
+from repro.embedding import (dequantize_params, fused_topk,
+                             normalize_backend, params_quantized)
 from repro.serve.telemetry import (LatencyRecorder, StreamTelemetry,
                                    compile_count)
 
-__all__ = ["Session", "RecsysSession", "ArchSession", "capacity_plan"]
+__all__ = ["Session", "RecsysSession", "ArchSession", "capacity_plan",
+           "normalize_scorer"]
+
+_SCORER_CHOICES = ("dense", "fused")
+
+
+def normalize_scorer(name: Optional[str]) -> str:
+    """Canonicalize a session scorer name: None/"auto" -> "dense" (the
+    classic score-all + lax.top_k path); "fused" -> the one-pass Pallas
+    gather->score->top-k kernel (repro.embedding.fused_topk)."""
+    if name in (None, "auto"):
+        return "dense"
+    name = str(name)
+    if name not in _SCORER_CHOICES:
+        raise ValueError(f"unknown scorer {name!r}; expected "
+                         f"{'|'.join(_SCORER_CHOICES)} (or auto)")
+    return name
 
 
 # ---------------------------------------------------------------------------
@@ -99,12 +116,19 @@ def _pad_state(params, statics, mcfg, caps: dict):
     p = {k: np.asarray(v) for k, v in params.items()}
     s = {k: np.asarray(v) for k, v in statics.items()}
     compressed = mcfg.k_users is not None
-    out_p = {
-        "user_table": _pad_rows(p["user_table"],
-                                caps["k_users"] if compressed else cu),
-        "item_table": _pad_rows(p["item_table"],
-                                caps["k_items"] if compressed else cv),
-    }
+    # pad by table-name prefix so int8 payloads ({name}_q int8 rows +
+    # {name}_scale fp32 vector) ride the same ladder as fp32 tables; a
+    # pad row dequantizes to 0 * 0 and is unreferenced either way
+    u_rows = caps["k_users"] if compressed else cu
+    v_rows = caps["k_items"] if compressed else cv
+    out_p = {}
+    for key, arr in p.items():
+        if key.startswith("user_table"):
+            out_p[key] = _pad_rows(arr, u_rows)
+        elif key.startswith("item_table"):
+            out_p[key] = _pad_rows(arr, v_rows)
+        else:
+            raise ValueError(f"unknown param table {key!r}")
     e = int(s["edge_u"].shape[0])
     out_s = {
         "edge_u": _pad_rows(s["edge_u"], ce, cu - 1),
@@ -170,13 +194,16 @@ class RecsysSession(Session):
 
     def __init__(self, params, statics, mcfg, k: int = 20,
                  backend: Optional[str] = None, capacity=None,
-                 telemetry: Optional[StreamTelemetry] = None):
+                 telemetry: Optional[StreamTelemetry] = None,
+                 scorer: Optional[str] = None, fused_block: int = 1024):
         if backend is not None:
             mcfg = dataclasses.replace(
                 mcfg, lookup_backend=normalize_backend(backend))
         else:
             normalize_backend(mcfg.lookup_backend)   # validate early
         self.k = int(k)
+        self.scorer = normalize_scorer(scorer)
+        self._fused_block = int(fused_block)
         self._lat = LatencyRecorder()
         self._stream = telemetry or StreamTelemetry()
         self._compiles_base = 0
@@ -203,12 +230,25 @@ class RecsysSession(Session):
                 self._shapes = set()
             from repro.models import lightgcn as L
 
-            def score_topk(params, statics, user_ids):
-                scores = L.score_all_items(params, statics, mcfg, user_ids)
-                mask = statics.get("item_mask")
-                if mask is not None:   # capacity padding: pad items -> -inf
-                    scores = scores + mask[None, :]
-                return jax.lax.top_k(scores, self.k)
+            if self.scorer == "fused":
+                # one-pass kernel over the propagated item embeddings:
+                # the [B, n_items] score matrix never materializes
+                def score_topk(params, statics, user_ids):
+                    params = dequantize_params(params)
+                    u, v = L.eval_embeddings(params, statics, mcfg,
+                                             user_ids)
+                    return fused_topk(u, v, self.k,
+                                      mask=statics.get("item_mask"),
+                                      block=self._fused_block)
+            else:
+                def score_topk(params, statics, user_ids):
+                    params = dequantize_params(params)
+                    scores = L.score_all_items(params, statics, mcfg,
+                                               user_ids)
+                    mask = statics.get("item_mask")
+                    if mask is not None:   # capacity pad items -> -inf
+                        scores = scores + mask[None, :]
+                    return jax.lax.top_k(scores, self.k)
 
             self._fn = jax.jit(score_topk)
         new_params = jax.device_put(jax.tree.map(jnp.asarray, params))
@@ -222,13 +262,14 @@ class RecsysSession(Session):
     def from_artifact(cls, artifact, k: int = 20,
                       backend: Optional[str] = None, capacity=None,
                       telemetry: Optional[StreamTelemetry] = None,
-                      ) -> "RecsysSession":
+                      scorer: Optional[str] = None) -> "RecsysSession":
         """The deploy path: rebuild the scoring session from a loaded
         CompressedArtifact. `backend` overrides the backend recorded in
-        the artifact meta (None keeps the trained choice)."""
-        return cls(artifact.params, artifact.statics(), artifact.mcfg(),
-                   k=k, backend=backend, capacity=capacity,
-                   telemetry=telemetry)
+        the artifact meta (None keeps the trained choice); a quantized
+        artifact serves its int8 payload (dequant inside the scorer)."""
+        return cls(artifact.serving_params(), artifact.statics(),
+                   artifact.mcfg(), k=k, backend=backend,
+                   capacity=capacity, telemetry=telemetry, scorer=scorer)
 
     # -- hot swap -----------------------------------------------------------
     def swap(self, artifact) -> dict:
@@ -245,7 +286,7 @@ class RecsysSession(Session):
         t0 = time.perf_counter()
         mcfg = dataclasses.replace(
             artifact.mcfg(), lookup_backend=self.mcfg.lookup_backend)
-        params, statics = artifact.params, artifact.statics()
+        params, statics = artifact.serving_params(), artifact.statics()
         bumped = False
         if self._caps is not None:
             try:
@@ -292,6 +333,8 @@ class RecsysSession(Session):
     def stats(self) -> dict:
         out = {"kind": "recsys", "k": self.k,
                "backend": self.mcfg.lookup_backend or "auto",
+               "scorer": self.scorer,
+               "quantized": params_quantized(self.params),
                "compiles": self.compile_count, **self._lat.summary()}
         if self._caps is not None or self._stream.swap.count:
             out["capacity"] = dict(self._caps) if self._caps else None

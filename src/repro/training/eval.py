@@ -40,7 +40,32 @@ def topk_from_scores(scores: np.ndarray, k: int,
     return np.take_along_axis(idx, order, axis=1)
 
 
+def _exclusion_blocks(exclude, nb: int, block: int, m: int):
+    """Bucket (row, item) exclusion pairs per item block, padded to the
+    max bucket size with row sentinel ``m`` (the scatter drops it).
+    Returns host int32 (ex_r, ex_c) of shape [nb, E]."""
+    if exclude is not None and np.asarray(exclude[0]).size:
+        rows = np.asarray(exclude[0], dtype=np.int32)
+        cols = np.asarray(exclude[1], dtype=np.int32)
+        order = np.argsort(cols, kind="stable")
+        rows, cols = rows[order], cols[order]
+        bounds = np.searchsorted(cols, np.arange(nb + 1, dtype=np.int64)
+                                 * block)
+        emax = max(1, int(np.max(np.diff(bounds))))
+        ex_r = np.full((nb, emax), m, dtype=np.int32)     # sentinel: row m
+        ex_c = np.zeros((nb, emax), dtype=np.int32)
+        for b in range(nb):
+            lo, hi = int(bounds[b]), int(bounds[b + 1])
+            ex_r[b, :hi - lo] = rows[lo:hi]
+            ex_c[b, :hi - lo] = cols[lo:hi] - b * block
+    else:
+        ex_r = np.full((nb, 1), m, dtype=np.int32)
+        ex_c = np.zeros((nb, 1), dtype=np.int32)
+    return ex_r, ex_c
+
+
 _TOPK_MERGE = []            # one process-wide jitted merge program
+_TOPK_SCAN = []             # one process-wide jitted scan program
 
 
 def _topk_merge_block(vals, idx, u, v_block, er, ec, i0, n, k):
@@ -74,9 +99,50 @@ def _topk_merge_block(vals, idx, u, v_block, er, ec, i0, n, k):
     return _TOPK_MERGE[0](vals, idx, u, v_block, er, ec, i0, n, k)
 
 
+def _topk_scan(u, v_blocks, ex_r, ex_c, i0s, n, k):
+    """All block merges in ONE dispatch: a jitted lax.scan whose body is
+    op-for-op the hostloop merge, so the ids are bitwise identical to
+    driving ``_topk_merge_block`` from a host loop (pinned in
+    tests/test_fused_topk.py). Compile is keyed on shapes + k and cached
+    at module scope like the merge program."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+
+    if not _TOPK_SCAN:
+        @functools.partial(jax.jit, static_argnums=(6,))
+        def scan(u, v_blocks, ex_r, ex_c, i0s, n, k):
+            m = u.shape[0]
+            init = (jnp.full((m, k), -jnp.inf, dtype=jnp.float32),
+                    jnp.zeros((m, k), dtype=jnp.int32))
+
+            def body(carry, xs):
+                vals, idx = carry
+                v_block, er, ec, i0 = xs
+                s = u @ v_block.T                             # [m, block]
+                col = i0 + jnp.arange(v_block.shape[0], dtype=jnp.int32)
+                s = jnp.where(col[None, :] < n, s, -jnp.inf)
+                s = s.at[er, ec].set(-jnp.inf, mode="drop")
+                cand_vals = jnp.concatenate([s, vals], axis=1)
+                cand_idx = jnp.concatenate(
+                    [jnp.broadcast_to(col[None, :],
+                                      s.shape).astype(jnp.int32), idx],
+                    axis=1)
+                top_vals, pos = jax.lax.top_k(cand_vals, k)
+                return (top_vals,
+                        jnp.take_along_axis(cand_idx, pos, axis=1)), None
+
+            (_, idx), _ = jax.lax.scan(body, init, (v_blocks, ex_r, ex_c,
+                                                    i0s))
+            return idx
+
+        _TOPK_SCAN.append(scan)
+    return _TOPK_SCAN[0](u, v_blocks, ex_r, ex_c, i0s, n, k)
+
+
 def topk_streaming(u_emb, v_emb, k: int, *, block: int = 4096,
                    exclude: Tuple[np.ndarray, np.ndarray] | None = None,
-                   ) -> np.ndarray:
+                   backend: str = "block") -> np.ndarray:
     """Row-wise top-k of ``u_emb @ v_emb.T`` without the score matrix.
 
     ``u_emb`` [m, d] / ``v_emb`` [n, d] are device (or host) arrays;
@@ -86,11 +152,22 @@ def topk_streaming(u_emb, v_emb, k: int, *, block: int = 4096,
     the block into the running [m, k] (values, ids). Exclusion pairs are
     bucketed per block on the host (indices only) and padded to the max
     bucket size with out-of-range sentinels that the scatter drops, so
-    every block runs the same compiled program. Within a block, ties
-    break toward the lower item id; rows with fewer than k scoreable
-    items are filled with distinct excluded/pad item ids.
+    every block runs the same compiled program.
 
-    Returns host int32 [m, k] item ids.
+    backend:
+      * "block"    (default) one jitted ``lax.scan`` over the stacked
+        block inputs — a single dispatch for the whole sweep, bitwise
+        the same ids as "hostloop".
+      * "hostloop" the per-block host dispatch loop (the pre-scan
+        implementation, kept as the bitwise parity pin).
+      * "fused"    the Pallas fused gather->score->top-k scorer
+        (``repro.embedding.fused_topk``) — no [m, block] score matrix
+        either; ties (including -inf fills for rows with fewer than k
+        scoreable items) break exactly like a dense ``lax.top_k``,
+        where "block"/"hostloop" fill such rows with block-local ids.
+
+    Within a block ties break toward the lower item id on every
+    backend. Returns host int32 [m, k] item ids.
     """
     import jax
     import jax.numpy as jnp
@@ -99,27 +176,18 @@ def topk_streaming(u_emb, v_emb, k: int, *, block: int = 4096,
     n = int(v_emb.shape[0])
     if k > n:
         raise ValueError(f"k={k} exceeds n_items={n}")
+    if backend not in ("block", "hostloop", "fused"):
+        raise ValueError(f"unknown topk_streaming backend {backend!r}; "
+                         f"expected block|hostloop|fused")
+
+    if backend == "fused":
+        from repro.embedding import fused_topk
+        _, idx = fused_topk(u_emb, v_emb, k, exclude=exclude, block=block)
+        return np.asarray(idx)
+
     block = int(min(max(block, k), n))
     nb = -(-n // block)
-
-    # host-side per-block exclusion buckets (row, local col), padded
-    if exclude is not None and np.asarray(exclude[0]).size:
-        rows = np.asarray(exclude[0], dtype=np.int32)
-        cols = np.asarray(exclude[1], dtype=np.int32)
-        order = np.argsort(cols, kind="stable")
-        rows, cols = rows[order], cols[order]
-        bounds = np.searchsorted(cols, np.arange(nb + 1, dtype=np.int64)
-                                 * block)
-        emax = max(1, int(np.max(np.diff(bounds))))
-        ex_r = np.full((nb, emax), m, dtype=np.int32)     # sentinel: row m
-        ex_c = np.zeros((nb, emax), dtype=np.int32)
-        for b in range(nb):
-            lo, hi = int(bounds[b]), int(bounds[b + 1])
-            ex_r[b, :hi - lo] = rows[lo:hi]
-            ex_c[b, :hi - lo] = cols[lo:hi] - b * block
-    else:
-        ex_r = np.full((nb, 1), m, dtype=np.int32)
-        ex_c = np.zeros((nb, 1), dtype=np.int32)
+    ex_r, ex_c = _exclusion_blocks(exclude, nb, block, m)
 
     u = jnp.asarray(u_emb)
     v = jnp.asarray(v_emb)
@@ -128,6 +196,12 @@ def topk_streaming(u_emb, v_emb, k: int, *, block: int = 4096,
         v = jnp.concatenate([v, jnp.zeros((pad, v.shape[1]), v.dtype)])
     ex_r = jnp.asarray(ex_r)
     ex_c = jnp.asarray(ex_c)
+
+    if backend == "block":
+        i0s = (jnp.arange(nb, dtype=jnp.int32) * block)
+        idx = _topk_scan(u, v.reshape(nb, block, -1), ex_r, ex_c, i0s,
+                         jnp.int32(n), k)
+        return np.asarray(idx)
 
     vals = jnp.full((m, k), -jnp.inf, dtype=jnp.float32)
     idx = jnp.zeros((m, k), dtype=jnp.int32)

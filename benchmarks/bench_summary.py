@@ -1,8 +1,8 @@
 """Merge every BENCH_*.json perf record into one trajectory table.
 
 Each benchmark in this repo emits a machine-readable record
-(BENCH_serve.json, BENCH_cluster.json, BENCH_train.json,
-BENCH_stream.json, BENCH_kernel.json, ...). CI uploads them side by
+(BENCH_serve.json, BENCH_server.json, BENCH_cluster.json,
+BENCH_train.json, BENCH_stream.json, BENCH_kernel.json, ...). CI uploads them side by
 side; this tool is the one place they are read together — the printed
 table is the repo's perf trajectory at a glance, and `--json` re-emits
 the merged record for downstream tooling.
@@ -60,8 +60,14 @@ def _headline(name: str, rec: dict) -> list:
         if sp:
             out.append(("best speedup_vs_seed", max(sp)))
         return out
+    if kind == "server":
+        keys = ("sustained_qps", "e2e_p50_ms", "e2e_p99_ms",
+                "queue_delay_p99_ms", "swap_pause_ms",
+                "compiles_under_load")
+        return [(k, rec[k]) for k in keys if k in rec]
     if kind == "stream":
-        keys = ("cold_assign_p50_ms", "swap_p99_ms",
+        keys = ("cold_assign_first_ms", "cold_assign_warm_p50_ms",
+                "swap_p99_ms",
                 "refresh_steady_frac_of_full", "recall_frozen",
                 "recall_stream", "recall_full", "recall_gap_recovered",
                 "compiles")
@@ -90,7 +96,8 @@ def _headline(name: str, rec: dict) -> list:
 # HIGHER token is good-when-up (speedups, bandwidth, recall); otherwise a
 # LOWER token marks it good-when-down (latencies, compile/error counts).
 # HIGHER is checked first so e.g. "speedup_vs_seed" never trips on "_s".
-_HIGHER = ("speedup", "gbps", "recall", "recovered", "records", "buckets")
+_HIGHER = ("speedup", "gbps", "recall", "recovered", "records", "buckets",
+           "qps")
 _LOWER = ("_ms", "_us", "us_per", "compiles", "_s", "frac_of_full", "err",
           "errors")
 

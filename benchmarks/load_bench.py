@@ -1,0 +1,167 @@
+"""Load benchmark: the serving front end under open-loop fire.
+
+Everything before this measured the server at its own pace
+(serve_bench.py is closed-loop); this bench submits Poisson/bursty
+arrivals at scheduled wall-clock times whether or not earlier requests
+finished — the only methodology under which queue delay, admission
+sheds and tail latency are real numbers rather than artifacts of the
+generator waiting politely.
+
+Scenario (one run, everything measured together):
+
+  * one training run publishes TWO artifact versions — the base, and a
+    fine-tune shipped as a verified delta (identical pytree, so the
+    mid-load swap cannot trigger a compile);
+  * three tenants over two device sessions: ``web`` solely owns the
+    base (capacity ladder — hot-swappable in place), ``mobile`` +
+    ``beta`` SHARE one session over the int8-quantized copy (the
+    pooling + footprint story);
+  * open-loop mixed traffic (Zipf users, mixed sizes, 2x bursts) with
+    a hot-user cache in front;
+  * halfway through, ``web`` hot-swaps to v2 UNDER LOAD — the
+    drain+swap pause is measured from inside the traffic, and the
+    compile count across every session must not move.
+
+``python benchmarks/load_bench.py --json [--out BENCH_server.json]``
+emits the machine-readable record (bench kind "server"); CI uploads it
+and bench_summary.py --check gates sustained QPS / tail latency /
+swap pause / compiles-under-load against the committed trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+BUCKETS = (1, 8, 64)
+
+
+def _two_versions(dataset: str, dim: int, steps: int, extra_steps: int,
+                  solver: str = "auto"):
+    """Train once; return (base artifact, delta-shipped v2)."""
+    from repro.core import ClusterEngine, normalize_solver
+    from repro.data import paperlike_dataset
+    from repro.training import Trainer, TrainConfig
+    _, _, _, train, _ = paperlike_dataset(dataset, seed=0)
+    engine = ClusterEngine(solver=normalize_solver(solver))
+    sketch = engine.build(train, d=dim, ratio=0.25)
+    tr = Trainer(train, sketch, TrainConfig(dim=dim, steps=steps,
+                                            batch_size=1024, lr=5e-3))
+    tr.run(log_every=0)
+    base = tr.export()
+    tr.run(steps=tr.step + extra_steps, log_every=0)  # keep fine-tuning
+    v2 = base.apply_delta(tr.export().delta(base))  # verified delta ship
+    return base, v2
+
+
+def bench(dataset: str = "beauty_s", dim: int = 32, steps: int = 60,
+          extra_steps: int = 24, qps: float = 120.0, duration: float = 4.0,
+          flush_ms: float = 2.0, queue_size: int = 256,
+          cache_entries: int = 1024, deadline_ms=None, seed: int = 0):
+    """-> JSON-able record for BENCH_server.json (bench kind "server")."""
+    from repro.frontdoor import Frontdoor, FrontdoorConfig, TrafficConfig, \
+        run_open_loop
+    base, v2 = _two_versions(dataset, dim, steps, extra_steps)
+
+    fd = Frontdoor(FrontdoorConfig(
+        queue_size=queue_size, policy="shed", flush_ms=flush_ms,
+        default_deadline_ms=deadline_ms, cache_entries=cache_entries,
+        k=20, buckets=BUCKETS))
+    fd.attach("web", base, capacity="auto")      # sole owner: swappable
+    shared = base.quantize()
+    fd.attach("mobile", shared)                  # one int8 session,
+    fd.attach("beta", shared)                    # two tenants
+    compiles_warm = fd.compile_count
+
+    with fd:
+        report = run_open_loop(
+            fd,
+            TrafficConfig(qps=qps, duration_s=duration, burst_factor=2.0,
+                          deadline_ms=deadline_ms, seed=seed),
+            tenants=["web", "mobile", "beta"],
+            tenant_weights=[0.5, 0.3, 0.2],
+            actions=[(duration / 2, lambda: fd.swap("web", v2))])
+    st = fd.stats()
+    swap = report["action_results"][0]
+    compiles_after = fd.compile_count
+    record = {
+        "bench": "server",
+        "platform": jax.default_backend(),
+        "dataset": dataset, "dim": dim,
+        "buckets": list(BUCKETS),
+        "tenants": 3,
+        "sessions": st["registry"]["sessions"],
+        "qps": qps, "duration_s": duration,
+        "offered": report["offered"],
+        "offered_qps": report["offered_qps"],
+        "responses": report["responses"],
+        "sustained_qps": report["sustained_qps"],
+        "shed": report["shed"],
+        "timeouts": report["timeouts"],
+        "failed": report["failed"],
+        "e2e_p50_ms": st["e2e_p50_ms"],
+        "e2e_p99_ms": st["e2e_p99_ms"],
+        "queue_delay_p50_ms": st["queue_delay_p50_ms"],
+        "queue_delay_p99_ms": st["queue_delay_p99_ms"],
+        "batch_fill_mean": st["batch_fill_mean"],
+        "batches": st["batches"],
+        "coalesced": st["coalesced"],
+        "bucket_counts": {str(k): v
+                          for k, v in st["bucket_counts"].items()},
+        "cache_hits": st["cache_hits"],
+        "swap_mode": swap["mode"],
+        "swap_pause_ms": swap["pause_ms"],
+        "swap_drain_ms": swap["drain_ms"],
+        "compiles_warm": compiles_warm,
+        "compiles_under_load": compiles_after - compiles_warm,
+    }
+    if record["swap_mode"] != "swapped":
+        record["warning"] = (f"expected the in-place swap path, got "
+                             f"{record['swap_mode']}")
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable perf record")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON record to this path "
+                         "(e.g. BENCH_server.json)")
+    ap.add_argument("--dataset", default="beauty_s")
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--extra-steps", type=int, default=24)
+    ap.add_argument("--qps", type=float, default=120.0)
+    ap.add_argument("--duration", type=float, default=4.0)
+    ap.add_argument("--flush-ms", type=float, default=2.0)
+    ap.add_argument("--queue-size", type=int, default=256)
+    ap.add_argument("--cache", type=int, default=1024)
+    ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    record = bench(dataset=args.dataset, dim=args.dim, steps=args.steps,
+                   extra_steps=args.extra_steps, qps=args.qps,
+                   duration=args.duration, flush_ms=args.flush_ms,
+                   queue_size=args.queue_size, cache_entries=args.cache,
+                   deadline_ms=args.deadline_ms, seed=args.seed)
+    text = json.dumps(record, indent=2)
+    if args.json:
+        print(text)
+    else:
+        for k, v in record.items():
+            print(f"{k}: {v}")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if record["compiles_under_load"]:
+        print(f"WARNING: {record['compiles_under_load']} XLA compiles "
+              f"under load (expected 0)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

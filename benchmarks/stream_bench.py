@@ -192,7 +192,10 @@ def bench(n_users=1800, n_items=1440, k_true=24, avg_deg=12, T=4, dim=32,
                    "base_steps": base_steps, "full_steps": full_steps,
                    "tune_steps": tune_steps,
                    "refresh_every": refresh_every, "seed": seed},
-        "cold_assign_p50_ms": report["cold_assign_p50_ms"],
+        # first call pays the one-time assignment-program compile; warm
+        # p50 is the per-event steady state a deployment actually feels
+        "cold_assign_first_ms": report["cold_assign_first_ms"],
+        "cold_assign_warm_p50_ms": report["cold_assign_warm_p50_ms"],
         "swap_p50_ms": tele["swap_p50_ms"],
         "swap_p99_ms": tele["swap_p99_ms"],
         "swaps": tele["swaps"],

@@ -1,0 +1,48 @@
+"""repro.frontdoor — async serving front end with continuous batching.
+
+Everything below ``CompressedArtifact`` served one synchronous caller
+(PR 2's Session + BatchDispatcher); this package is the traffic layer a
+real deployment puts in front of it:
+
+  * ``Frontdoor`` — bounded admission queue (shed-or-block
+    backpressure), per-request deadline budgets, a hot-user response
+    cache, and drain-then-swap version changes measured UNDER load.
+  * ``ContinuousBatcher`` — one consumer thread coalescing concurrent
+    requests into the bucket ladder with a deadline-or-full flush rule
+    (low-load p50 pays at most ``flush_ms``, loaded batches fill to the
+    top bucket).
+  * ``TenantRegistry`` — many logical tenants over few device-resident
+    sessions, pooled by artifact ``content_id()``; swaps repoint, hot
+    swap in place (the PR 5 delta path), or attach, cheapest first.
+  * ``loadgen`` — the open-loop traffic model (Poisson/bursty arrivals,
+    Zipf users, mixed sizes) behind ``benchmarks/load_bench.py``.
+
+Usage — attach, start, drive::
+
+    from repro.frontdoor import Frontdoor, FrontdoorConfig
+
+    fd = Frontdoor(FrontdoorConfig(queue_size=256, flush_ms=2.0,
+                                   cache_entries=2048,
+                                   capacity={"n_users": 100_000}))
+    fd.attach("web", artifact)          # tenants sharing an artifact
+    fd.attach("mobile", artifact)       # share ONE device session
+    with fd:
+        ticket = fd.submit([1, 2, 3], tenant="web", deadline_ms=50)
+        values, items = ticket.result()
+        fd.swap("web", new_artifact)    # drained, under load, counted
+    print(fd.stats())                   # e2e/queue p50/p99, fill, sheds
+
+CLI: ``python -m repro.launch.frontdoor``; bench:
+``python benchmarks/load_bench.py --json`` (emits BENCH_server.json).
+"""
+from .batcher import BatcherConfig, ContinuousBatcher
+from .cache import HotUserCache
+from .loadgen import TrafficConfig, run_open_loop
+from .request import DeadlineExceeded, Request, RequestShed, Ticket
+from .server import Frontdoor, FrontdoorConfig
+from .tenants import Tenant, TenantRegistry
+
+__all__ = ["BatcherConfig", "ContinuousBatcher", "HotUserCache",
+           "TrafficConfig", "run_open_loop", "DeadlineExceeded", "Request",
+           "RequestShed", "Ticket", "Frontdoor", "FrontdoorConfig",
+           "Tenant", "TenantRegistry"]

@@ -120,16 +120,28 @@ def main(argv=None):
                     help="draw each request's batch size from [1, top "
                          "bucket] instead of --batch")
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "gather", "onehot", "pallas"],
-                    help="EmbeddingEngine lookup backend override")
+                    help="EmbeddingEngine lookup backend override "
+                         "(auto keeps the artifact's choice)")
     ap.add_argument("--scorer", default="auto",
-                    choices=["auto", "dense", "fused"],
                     help="top-k readout: dense score-then-top_k (auto/"
                          "dense) or the fused Pallas scorer")
     ap.add_argument("--cluster-solver", default="auto",
                     help="ClusterEngine solver for on-the-spot "
-                         "compression: auto | jax | jax_sharded | numpy")
+                         "compression (auto picks per platform)")
     args = ap.parse_args(argv)
+    # validate against the live registries, not a hard-coded list: a
+    # typo'd name must fail HERE with what actually exists, not after
+    # minutes of clustering+training (the build_sketch re-raise pattern)
+    from repro.core import normalize_solver
+    from repro.embedding import normalize_backend
+    from repro.serve.session import normalize_scorer
+    for fn, value in ((normalize_backend, args.backend),
+                      (normalize_scorer, args.scorer),
+                      (normalize_solver, args.cluster_solver)):
+        try:
+            fn(value)
+        except (KeyError, ValueError) as e:
+            ap.error(str(e.args[0] if e.args else e))
     if args.arch:
         return arch_serving(args)
     return paper_serving(args)

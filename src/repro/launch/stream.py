@@ -102,7 +102,9 @@ def main(argv=None):
           f"+{tele['new_edges']} edges), {tele['refreshes']} refreshes "
           f"(mean churn {tele['churn_mean']}), {tele['swaps']} swaps "
           f"p99={tele['swap_p99_ms']}ms, cold-assign "
-          f"p50={report['cold_assign_p50_ms']}ms, session compiles="
+          f"first={report['cold_assign_first_ms']}ms (compile) / "
+          f"warm p50={report['cold_assign_warm_p50_ms']}ms, "
+          f"session compiles="
           f"{session.compile_count}, mean delta "
           f"{report['delta_bytes_mean'] // 1024}KB")
     print(f"[stream] serving telemetry: {session.stats()}")

@@ -39,11 +39,12 @@ Bench: ``python benchmarks/serve_bench.py --json``.
 """
 from .artifact import (ARTIFACT_VERSION, DELTA_VERSION, ArtifactDelta,
                        CompressedArtifact)
-from .dispatch import DEFAULT_BUCKETS, BatchDispatcher
+from .dispatch import DEFAULT_BUCKETS, BatchDispatcher, chunk_plan
 from .session import ArchSession, RecsysSession, Session, capacity_plan
-from .telemetry import LatencyRecorder, StreamTelemetry
+from .telemetry import FrontdoorTelemetry, LatencyRecorder, StreamTelemetry
 
 __all__ = ["ARTIFACT_VERSION", "DELTA_VERSION", "ArtifactDelta",
            "CompressedArtifact", "DEFAULT_BUCKETS", "BatchDispatcher",
-           "Session", "RecsysSession", "ArchSession", "LatencyRecorder",
-           "StreamTelemetry", "capacity_plan"]
+           "chunk_plan", "Session", "RecsysSession", "ArchSession",
+           "FrontdoorTelemetry", "LatencyRecorder", "StreamTelemetry",
+           "capacity_plan"]

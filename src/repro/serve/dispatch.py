@@ -29,9 +29,27 @@ import numpy as np
 
 from repro.serve.telemetry import LatencyRecorder
 
-__all__ = ["BatchDispatcher", "DEFAULT_BUCKETS"]
+__all__ = ["BatchDispatcher", "DEFAULT_BUCKETS", "chunk_plan"]
 
 DEFAULT_BUCKETS = (1, 8, 64, 512)
+
+
+def chunk_plan(n: int, buckets: Sequence[int]):
+    """[(size, bucket), ...] covering a request of ``n`` rows: full
+    top-bucket chunks plus one bucketed remainder. The single source of
+    the padding arithmetic — the dispatcher executes this plan, and the
+    frontdoor batcher reads it to report batch-fill ratio and bucket
+    occupancy without re-deriving the rule."""
+    if n < 1:
+        raise ValueError("empty request")
+    top = buckets[-1]
+    plan = []
+    start = 0
+    while start < n:
+        m = min(n - start, top)
+        plan.append((m, next(b for b in buckets if m <= b)))
+        start += m
+    return plan
 
 
 class BatchDispatcher:
@@ -68,15 +86,10 @@ class BatchDispatcher:
         to the true size (chunked through the top bucket when oversized)."""
         user_ids = np.asarray(user_ids, np.int32)
         n = int(user_ids.shape[0])
-        if n < 1:
-            raise ValueError("empty request")
         t0 = time.perf_counter()
         outs = []
-        top = self.buckets[-1]
         start = 0
-        while start < n:
-            m = min(n - start, top)
-            bucket = self.bucket_for(m)
+        for m, bucket in chunk_plan(n, self.buckets):
             chunk = user_ids[start:start + m]
             if m < bucket:
                 chunk = np.concatenate(

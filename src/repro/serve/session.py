@@ -211,6 +211,12 @@ class RecsysSession(Session):
         self._fn = None
         self.mcfg = None
         self._caps = None
+        # publication identity: bumped on every swap; the content_id of
+        # the served artifact when the session came from one (None for
+        # live-state sessions). The frontdoor keys tenant sharing and
+        # response-cache invalidation on these.
+        self.swap_epoch = 0
+        self.artifact_id = None
         if capacity is not None:
             if capacity is True or capacity == "auto":
                 capacity = {}
@@ -267,9 +273,11 @@ class RecsysSession(Session):
         CompressedArtifact. `backend` overrides the backend recorded in
         the artifact meta (None keeps the trained choice); a quantized
         artifact serves its int8 payload (dequant inside the scorer)."""
-        return cls(artifact.serving_params(), artifact.statics(),
-                   artifact.mcfg(), k=k, backend=backend,
-                   capacity=capacity, telemetry=telemetry, scorer=scorer)
+        session = cls(artifact.serving_params(), artifact.statics(),
+                      artifact.mcfg(), k=k, backend=backend,
+                      capacity=capacity, telemetry=telemetry, scorer=scorer)
+        session.artifact_id = artifact.content_id()
+        return session
 
     # -- hot swap -----------------------------------------------------------
     def swap(self, artifact) -> dict:
@@ -299,6 +307,8 @@ class RecsysSession(Session):
                 bumped = True
                 self._stream.bump("capacity_bumps")
         self._install(params, statics, mcfg)
+        self.swap_epoch += 1
+        self.artifact_id = artifact.content_id()
         ms = (time.perf_counter() - t0) * 1e3
         self._stream.swap.record(ms)
         return {"ms": round(ms, 3), "capacity_bumped": bumped,

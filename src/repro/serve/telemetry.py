@@ -9,6 +9,13 @@ Streaming deployments additionally carry a ``StreamTelemetry``: hot-swap
 latency (a swap happens between requests, so its cost is pure serving
 headroom), label churn per refresh, and monotone counters for the
 replay loop (appends, cold assigns, refreshes, capacity bumps).
+
+The async front end (``repro.frontdoor``) carries a
+``FrontdoorTelemetry``: end-to-end and queue-delay percentiles,
+batch-fill ratio and per-bucket occupancy (how well the continuous
+batcher packs the ladder), shed/timeout/cache counters, and the
+swap-under-load pause (drain wait + device swap — the number PR 5's
+idle swap p99 could not measure).
 """
 from __future__ import annotations
 
@@ -16,7 +23,8 @@ from typing import List
 
 import numpy as np
 
-__all__ = ["LatencyRecorder", "StreamTelemetry", "compile_count"]
+__all__ = ["LatencyRecorder", "StreamTelemetry", "FrontdoorTelemetry",
+           "compile_count"]
 
 
 class LatencyRecorder:
@@ -74,6 +82,63 @@ class StreamTelemetry:
                              if self._churn else float("nan"))
         out["churn_last"] = (round(self._churn[-1], 4)
                              if self._churn else float("nan"))
+        return out
+
+
+class FrontdoorTelemetry:
+    """Counters for the async serving front end (one per Frontdoor).
+
+    Latency recorders (all milliseconds):
+      e2e         submit -> response (what a caller experiences)
+      queue_delay submit -> batch dispatch (time spent waiting to be
+                  coalesced; the batcher's flush rule bounds this at
+                  low load, the queue bound at overload)
+      swap_pause  swap request -> completion under load: drain wait for
+                  the in-flight batch PLUS the device swap itself
+
+    ``record_batch`` tracks how well the continuous batcher packs the
+    bucket ladder: fill ratio = real ids / padded ids, and per-bucket
+    occupancy counts. Counters: requests, responses, batches, coalesced
+    (requests that shared a batch with another), shed (admission
+    refused), timeouts (expired in queue), cache_hits, swaps, errors.
+    """
+
+    def __init__(self):
+        self.e2e = LatencyRecorder()
+        self.queue_delay = LatencyRecorder()
+        self.swap_pause = LatencyRecorder()
+        self._fill: List[float] = []
+        self.bucket_counts: dict = {}
+        self.counters = {"requests": 0, "responses": 0, "batches": 0,
+                         "coalesced": 0, "shed": 0, "timeouts": 0,
+                         "cache_hits": 0, "swaps": 0, "errors": 0}
+
+    def bump(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + int(n)
+
+    def record_batch(self, n_requests: int, n_ids: int, n_padded: int,
+                     buckets_used) -> None:
+        """One dispatched batch: ``n_requests`` coalesced requests
+        totalling ``n_ids`` real rows, padded to ``n_padded`` rows
+        across ``buckets_used`` ladder rungs."""
+        self.counters["batches"] += 1
+        if n_requests > 1:
+            self.counters["coalesced"] += n_requests
+        self._fill.append(n_ids / max(n_padded, 1))
+        for b in buckets_used:
+            self.bucket_counts[int(b)] = self.bucket_counts.get(int(b), 0) + 1
+
+    def summary(self) -> dict:
+        out = dict(self.counters)
+        out["e2e_p50_ms"] = round(self.e2e.percentile(50), 3)
+        out["e2e_p99_ms"] = round(self.e2e.percentile(99), 3)
+        out["queue_delay_p50_ms"] = round(self.queue_delay.percentile(50), 3)
+        out["queue_delay_p99_ms"] = round(self.queue_delay.percentile(99), 3)
+        out["batch_fill_mean"] = (round(float(np.mean(self._fill)), 4)
+                                  if self._fill else float("nan"))
+        out["bucket_counts"] = dict(sorted(self.bucket_counts.items()))
+        out["swap_pause_p50_ms"] = round(self.swap_pause.percentile(50), 3)
+        out["swap_pause_p99_ms"] = round(self.swap_pause.percentile(99), 3)
         return out
 
 

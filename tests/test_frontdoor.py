@@ -1,0 +1,463 @@
+"""repro.frontdoor: continuous batching (coalescing + deadline-or-full),
+admission control (shed/block/deadlines), tenant registry swap modes,
+hot-user cache invalidation, open-loop load generation, and the
+end-to-end compile invariant with a real session under concurrent load.
+
+The identity-correctness tests are seeded randomized property tests
+(hypothesis is not a dependency of this repo): many trials of random
+sizes / arrival orders / interleavings, each asserting an exact
+per-request identity mapping through the shared-batch scatter."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import baco_build
+from repro.data import planted_coclusters
+from repro.frontdoor import (DeadlineExceeded, Frontdoor, FrontdoorConfig,
+                             HotUserCache, RequestShed, TenantRegistry,
+                             Ticket, TrafficConfig, run_open_loop)
+from repro.frontdoor.loadgen import arrival_times, zipf_ids
+from repro.serve import BatchDispatcher, chunk_plan
+from repro.training import Trainer, TrainConfig
+
+
+# ---------------------------------------------------------------------------
+# stubs: the Session protocol without jax, with identity-traceable outputs
+# ---------------------------------------------------------------------------
+class EchoSession:
+    """values[i] = ids[i] + version * 1e6 — every output row names the
+    input id that produced it AND the artifact version that served it,
+    so scatter bugs and stale-version bugs are both detectable."""
+
+    def __init__(self, version: int = 0, delay_s: float = 0.0):
+        self.version = version
+        self.delay_s = delay_s
+        self.calls = 0
+        self._shapes = set()
+        self.swap_epoch = 0
+        self.artifact_id = f"echo-v{version}"
+
+    def warmup(self, batch: int = 1):
+        self._shapes.add(int(batch))
+
+    def __call__(self, user_ids):
+        ids = np.asarray(user_ids, np.int32)
+        self.calls += 1
+        self._shapes.add(int(ids.shape[0]))
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        vals = ids.astype(np.float64) + self.version * 1e6
+        items = np.stack([ids, ids + 1], axis=1)
+        return vals, items
+
+    def swap(self, artifact):
+        self.version = artifact.version
+        self.swap_epoch += 1
+        self.artifact_id = artifact.content_id()
+        return {"ms": 0.0}
+
+    @property
+    def compile_count(self):
+        return len(self._shapes)
+
+    def stats(self):
+        return {"calls": self.calls, "compiles": self.compile_count}
+
+
+class FakeArtifact:
+    """content_id + model dict — all TenantRegistry needs."""
+
+    def __init__(self, version: int, n_users: int = 1000):
+        self.version = version
+        self.model = {"n_users": n_users, "n_items": 500}
+
+    def content_id(self):
+        return f"fake-{self.version}"
+
+
+def _registry(delay_s: float = 0.0, buckets=(1, 8, 64)):
+    return TenantRegistry(
+        buckets=buckets,
+        session_factory=lambda art, cap: EchoSession(version=art.version,
+                                                     delay_s=delay_s))
+
+
+def _check_echo(ids, vals, items, version=0):
+    ids = np.asarray(ids)
+    assert vals.shape[0] == ids.size and items.shape[0] == ids.size
+    np.testing.assert_array_equal(np.asarray(vals) - version * 1e6,
+                                  ids.astype(np.float64))
+    np.testing.assert_array_equal(np.asarray(items)[:, 0], ids)
+
+
+# ---------------------------------------------------------------------------
+# chunk_plan: the one source of padding arithmetic
+# ---------------------------------------------------------------------------
+def test_chunk_plan_covers_and_buckets():
+    rng = np.random.default_rng(0)
+    buckets = (1, 8, 64)
+    for _ in range(200):
+        n = int(rng.integers(1, 300))
+        plan = chunk_plan(n, buckets)
+        assert sum(m for m, _ in plan) == n
+        for m, b in plan:
+            assert b in buckets and m <= b
+            # b is the SMALLEST bucket that fits m
+            assert all(bb < m for bb in buckets if bb < b)
+        # every chunk except the last is a full top bucket
+        assert all(m == buckets[-1] for m, _ in plan[:-1])
+
+
+def test_chunk_plan_rejects_empty():
+    with pytest.raises(ValueError, match="empty"):
+        chunk_plan(0, (1, 8))
+
+
+# ---------------------------------------------------------------------------
+# BatchDispatcher ordering property: identity-correct under shuffled
+# arrival order, oversize chunking, interleaved bucket sizes (satellite)
+# ---------------------------------------------------------------------------
+def test_dispatcher_identity_property():
+    rng = np.random.default_rng(7)
+    sess = EchoSession()
+    disp = BatchDispatcher(sess, buckets=(1, 8, 64))
+    for _ in range(100):
+        # sizes deliberately straddle every rung AND exceed the top
+        # bucket (oversize requests chunk through it)
+        n = int(rng.choice([1, 2, 7, 8, 9, 63, 64, 65, 130, 200]))
+        ids = rng.integers(0, 10_000, n).astype(np.int32)
+        vals, items = disp(ids)
+        _check_echo(ids, vals, items)
+    top = disp.buckets[-1]
+    assert sess.compile_count <= len(disp.buckets), \
+        "ladder must bound distinct shapes"
+    assert disp.stats()["bucket_counts"][top] > 0
+
+
+# ---------------------------------------------------------------------------
+# Ticket
+# ---------------------------------------------------------------------------
+def test_ticket_resolve_reject_timeout():
+    t = Ticket()
+    assert not t.done()
+    with pytest.raises(TimeoutError):
+        t.result(timeout=0.01)
+    t.resolve(("v", "i"))
+    assert t.done() and t.result() == ("v", "i")
+    t2 = Ticket()
+    t2.reject(RuntimeError("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        t2.result()
+    assert isinstance(t2.error(), RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# HotUserCache
+# ---------------------------------------------------------------------------
+def test_cache_all_or_nothing_and_lru():
+    c = HotUserCache(max_entries=4)
+    ids = np.arange(3, dtype=np.int32)
+    vals = np.arange(3, dtype=np.float64)
+    items = np.stack([ids, ids], axis=1)
+    c.put("a", ids, vals, items)
+    hit = c.get("a", np.asarray([2, 0], np.int32))
+    assert hit is not None
+    np.testing.assert_array_equal(hit[0], [2.0, 0.0])
+    # partial coverage -> miss (no partial answers from the cache)
+    assert c.get("a", np.asarray([0, 99], np.int32)) is None
+    # same ids, other tenant -> miss
+    assert c.get("b", np.asarray([0], np.int32)) is None
+    # LRU eviction at capacity: id 1 was never touched by a get, so it
+    # is the least-recently-used entry and the one evicted
+    c.put("a", np.asarray([10, 11], np.int32), vals[:2], items[:2])
+    assert len(c) == 4
+    assert c.get("a", np.asarray([1], np.int32)) is None   # evicted
+    assert c.get("a", np.asarray([0], np.int32)) is not None
+    # invalidate drops only the tenant's shard (the put for "b" evicted
+    # one more "a" entry to stay within capacity: 3 left)
+    c.put("b", ids[:1], vals[:1], items[:1])
+    assert c.invalidate("a") == 3
+    assert c.get("b", ids[:1]) is not None
+
+
+# ---------------------------------------------------------------------------
+# TenantRegistry: pooling + the three swap modes
+# ---------------------------------------------------------------------------
+def test_registry_pools_sessions_by_content_id():
+    reg = _registry()
+    a1 = FakeArtifact(1)
+    reg.attach("web", a1)
+    reg.attach("mobile", a1)
+    assert reg.n_sessions == 1 and reg.attaches == 1
+    assert reg.session("web") is reg.session("mobile")
+    assert sorted(reg.sharers("fake-1")) == ["mobile", "web"]
+    with pytest.raises(ValueError, match="already attached"):
+        reg.attach("web", a1)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        reg.tenant("nope")
+
+
+def test_registry_swap_modes():
+    reg = _registry()
+    a1, a2 = FakeArtifact(1), FakeArtifact(2)
+    reg.attach("web", a1)
+    reg.attach("mobile", a1)
+
+    assert reg.swap("web", a1)["mode"] == "noop"
+
+    # old version still has a sharer -> the new version attaches fresh
+    out = reg.swap("web", a2)
+    assert out["mode"] == "attached"
+    assert reg.n_sessions == 2
+    assert reg.session("web") is not reg.session("mobile")
+
+    # target version already resident -> pure repoint, and the
+    # abandoned old version's session is evicted
+    out = reg.swap("mobile", a2)
+    assert out["mode"] == "repointed"
+    assert reg.n_sessions == 1
+    assert reg.session("web") is reg.session("mobile")
+
+    # sole owner -> in-place hot swap, same session object
+    reg2 = _registry()
+    reg2.attach("solo", a1)
+    sess = reg2.session("solo")
+    out = reg2.swap("solo", a2)
+    assert out["mode"] == "swapped"
+    assert reg2.session("solo") is sess
+    assert sess.version == 2 and sess.swap_epoch == 1
+    assert reg2.tenant("solo").swaps == 1
+
+
+# ---------------------------------------------------------------------------
+# Frontdoor: coalescing, identity under concurrency, policies, deadlines
+# ---------------------------------------------------------------------------
+def _frontdoor(delay_s=0.0, **kw):
+    kw.setdefault("buckets", (1, 8, 64))
+    fd = Frontdoor(FrontdoorConfig(**kw),
+                   registry=_registry(delay_s=delay_s,
+                                      buckets=kw["buckets"]))
+    fd.registry.attach("default", FakeArtifact(0))
+    return fd
+
+
+def test_frontdoor_coalesces_and_scatters_correctly():
+    """The concurrency property test: many client threads, shuffled
+    arrival, mixed sizes — every response must map back to exactly its
+    request's ids (shared-batch scatter identity)."""
+    fd = _frontdoor(flush_ms=5.0)
+    results = {}
+    rng = np.random.default_rng(3)
+    requests = [(i, rng.integers(0, 5000, int(rng.choice([1, 2, 4, 8])))
+                 .astype(np.int32)) for i in range(60)]
+
+    def client(i, ids):
+        results[i] = fd(ids, timeout=30)
+
+    with fd:
+        threads = [threading.Thread(target=client, args=r)
+                   for r in requests]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    st = fd.stats()
+    for i, ids in requests:
+        _check_echo(ids, *results[i])
+    assert st["responses"] == len(requests)
+    assert st["batches"] < len(requests), \
+        "concurrent submits must coalesce into shared batches"
+    assert st["coalesced"] > 0
+    assert 0 < st["batch_fill_mean"] <= 1.0
+
+
+def test_frontdoor_shed_policy_and_counter():
+    fd = _frontdoor(delay_s=0.05, queue_size=2, policy="shed",
+                    flush_ms=0.5)
+    shed = 0
+    tickets = []
+    with fd:
+        for i in range(30):
+            try:
+                tickets.append(fd.submit(np.asarray([i], np.int32)))
+            except RequestShed:
+                shed += 1
+        for t in tickets:
+            t.result(timeout=30)
+    assert shed > 0, "a 2-deep queue against a 50ms session must shed"
+    assert fd.stats()["shed"] == shed
+    assert fd.stats()["responses"] == len(tickets)
+
+
+def test_frontdoor_block_policy_serves_everything():
+    fd = _frontdoor(delay_s=0.01, queue_size=1, policy="block",
+                    flush_ms=0.5)
+    with fd:
+        tickets = [fd.submit(np.asarray([i], np.int32)) for i in range(10)]
+        for i, t in enumerate(tickets):
+            vals, _ = t.result(timeout=30)
+            assert vals[0] == float(i)
+    assert fd.stats()["shed"] == 0
+    assert fd.stats()["responses"] == 10
+
+
+def test_frontdoor_deadline_rejects_expired_unscored():
+    fd = _frontdoor(delay_s=0.08, flush_ms=0.5)
+    with fd:
+        first = fd.submit(np.asarray([1], np.int32))       # occupies device
+        time.sleep(0.01)        # let `first` flush alone (0.5ms window)
+        doomed = fd.submit(np.asarray([2], np.int32), deadline_ms=10)
+        first.result(timeout=30)
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=30)
+    st = fd.stats()
+    assert st["timeouts"] == 1
+    assert st["responses"] == 1
+
+
+def test_frontdoor_validates_inputs():
+    fd = _frontdoor()
+    with pytest.raises(RuntimeError, match="not accepting"):
+        fd.submit(np.asarray([1], np.int32))               # not started
+    with fd:
+        with pytest.raises(ValueError, match="empty"):
+            fd.submit(np.asarray([], np.int32))
+        with pytest.raises(KeyError, match="unknown tenant"):
+            fd.submit(np.asarray([1], np.int32), tenant="nope")
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        FrontdoorConfig(policy="drop")
+
+
+def test_frontdoor_cache_hits_and_swap_invalidation():
+    fd = _frontdoor(cache_entries=64, flush_ms=0.5)
+    ids = np.asarray([7, 9], np.int32)
+    with fd:
+        _check_echo(ids, *fd(ids))
+        vals, items = fd(ids)                  # answered from the cache
+        _check_echo(ids, vals, items, version=0)
+        st = fd.stats()
+        assert st["cache_hits"] == 1
+        assert st["cache_entries"] == 2
+        out = fd.swap("default", FakeArtifact(4))
+        assert out["mode"] == "swapped"
+        assert out["cache_invalidated"] == 2
+        # post-swap: a real dispatch on the NEW version, not stale rows
+        vals, items = fd(ids)
+        _check_echo(ids, vals, items, version=4)
+    assert fd.stats()["swaps"] == 1
+    assert fd.stats()["swap_pause_p99_ms"] >= 0.0
+
+
+def test_frontdoor_graceful_stop_serves_admitted():
+    fd = _frontdoor(delay_s=0.005, flush_ms=50.0)   # long coalesce window
+    with fd:
+        tickets = [fd.submit(np.asarray([i], np.int32)) for i in range(5)]
+    # context exit = stop(): pending requests must still be answered
+    for t in tickets:
+        assert t.result(timeout=30) is not None
+    assert fd.stats()["responses"] == 5
+
+
+def test_frontdoor_multi_tenant_batches_are_per_tenant():
+    fd = _frontdoor(flush_ms=2.0)
+    fd.registry.attach("other", FakeArtifact(5))
+    with fd:
+        a = fd.submit(np.asarray([1, 2], np.int32), tenant="default")
+        b = fd.submit(np.asarray([3], np.int32), tenant="other")
+        _check_echo([1, 2], *a.result(timeout=30), version=0)
+        _check_echo([3], *b.result(timeout=30), version=5)
+    assert fd.registry.n_sessions == 2
+
+
+# ---------------------------------------------------------------------------
+# loadgen
+# ---------------------------------------------------------------------------
+def test_arrival_times_rate_and_bursts():
+    rng = np.random.default_rng(0)
+    cfg = TrafficConfig(qps=200, duration_s=2.0, burst_factor=1.0)
+    t = arrival_times(cfg, rng)
+    assert np.all((t >= 0) & (t < 2.0)) and np.all(np.diff(t) >= 0)
+    assert 300 < t.size < 500                  # ~400 expected, Poisson
+    bursty = arrival_times(
+        TrafficConfig(qps=200, duration_s=2.0, burst_factor=3.0),
+        np.random.default_rng(0))
+    assert bursty.size > t.size                # bursts add arrivals
+
+
+def test_zipf_ids_skewed_and_in_range():
+    rng = np.random.default_rng(0)
+    ids = zipf_ids(rng, 5000, 100, a=1.2)
+    assert ids.dtype == np.int32
+    assert ids.min() >= 0 and ids.max() < 100
+    top = np.bincount(ids, minlength=100).max()
+    assert top > 2 * 5000 / 100, "zipf head must dominate uniform rate"
+
+
+def test_run_open_loop_accounts_every_arrival():
+    fd = _frontdoor(flush_ms=1.0)
+    fired = []
+    with fd:
+        report = run_open_loop(
+            fd, TrafficConfig(qps=300, duration_s=0.5, seed=1),
+            actions=[(0.25, lambda: fired.append(1) or "acted")])
+    assert report["offered"] == report["submitted"]
+    assert report["responses"] == report["submitted"]
+    assert report["shed"] == report["timeouts"] == report["failed"] == 0
+    assert report["sustained_qps"] > 0
+    assert fired == [1] and report["action_results"] == ["acted"]
+
+
+# ---------------------------------------------------------------------------
+# end to end with a REAL session: swap under concurrent load, zero compiles
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def trained():
+    graph, _, _ = planted_coclusters(n_users=150, n_items=110, k_true=6,
+                                     avg_deg=8, seed=0)
+    sketch = baco_build(graph, d=8, ratio=0.3)
+    tr = Trainer(graph, sketch,
+                 TrainConfig(dim=8, steps=5, batch_size=64, lr=1e-2))
+    tr.run(log_every=0)
+    return tr
+
+
+def test_frontdoor_real_session_swap_under_load(trained):
+    base = trained.export()
+    trained.run(steps=trained.step + 3, log_every=0)
+    v2 = base.apply_delta(trained.export().delta(base))
+    assert v2.content_id() != base.content_id()
+
+    fd = Frontdoor(FrontdoorConfig(k=5, buckets=(1, 8), cache_entries=0))
+    fd.attach("web", base, capacity="auto")
+    compiles_warm = fd.compile_count
+    assert compiles_warm > 0                    # ladder actually warmed
+
+    n_users = trained.graph.n_users
+    errors = []
+
+    def client(cid):
+        rng = np.random.default_rng(cid)
+        try:
+            for _ in range(8):
+                ids = rng.integers(0, n_users, int(rng.choice([1, 3, 8])))
+                vals, items = fd(ids.astype(np.int32), tenant="web")
+                assert items.shape[0] == ids.size
+        except Exception as e:                  # surface across threads
+            errors.append(e)
+
+    with fd:
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(3)]
+        for t in threads:
+            t.start()
+        swap = fd.swap("web", v2)               # under live traffic
+        for t in threads:
+            t.join()
+    assert not errors, errors[0]
+    assert swap["mode"] == "swapped"
+    assert fd.registry.session("web").artifact_id == v2.content_id()
+    assert fd.compile_count == compiles_warm, \
+        "concurrent load + hot swap must not compile new programs"
+    assert fd.stats()["responses"] == 3 * 8

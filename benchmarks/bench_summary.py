@@ -72,6 +72,29 @@ def _headline(name: str, rec: dict) -> list:
                 "recall_stream", "recall_full", "recall_gap_recovered",
                 "compiles")
         return [(k, rec[k]) for k in keys if k in rec]
+    if kind == "cluster_scale":
+        rungs = [r for r in rec.get("rungs", []) if isinstance(r, dict)]
+        out = []
+        for r in rungs:
+            tag = r.get("rung", "?")
+            if isinstance(r.get("sweep_ms"), (int, float)):
+                out.append((f"{tag} sweep_ms", r["sweep_ms"]))
+            if isinstance(r.get("peak_device_bytes"), (int, float)):
+                out.append((f"{tag} peak_mb",
+                            round(r["peak_device_bytes"] / 1e6, 1)))
+            if isinstance(r.get("blocks_per_s"), (int, float)):
+                out.append((f"{tag} blocks_per_s", r["blocks_per_s"]))
+        recalls = [r["cold"]["minhash_recall"] for r in rungs
+                   if isinstance(r.get("cold"), dict)
+                   and isinstance(r["cold"].get("minhash_recall"),
+                                  (int, float))]
+        if recalls:
+            out.append(("min minhash_recall", min(recalls)))
+        bitwise = [r["bitwise_equal_inmem"] for r in rungs
+                   if "bitwise_equal_inmem" in r]
+        if bitwise:
+            out.append(("bitwise_parity", "ok" if all(bitwise) else "FAIL"))
+        return out
     if kind == "kernel":
         fused = [r for r in rec.get("fused", [])
                  if isinstance(r, dict) and "us_per_call" in r]
@@ -97,9 +120,9 @@ def _headline(name: str, rec: dict) -> list:
 # LOWER token marks it good-when-down (latencies, compile/error counts).
 # HIGHER is checked first so e.g. "speedup_vs_seed" never trips on "_s".
 _HIGHER = ("speedup", "gbps", "recall", "recovered", "records", "buckets",
-           "qps")
+           "qps", "per_s")
 _LOWER = ("_ms", "_us", "us_per", "compiles", "_s", "frac_of_full", "err",
-          "errors")
+          "errors", "_mb")
 
 
 def _direction(metric: str):

@@ -3,7 +3,13 @@ BACO's LP solver vs Louvain (GraphHash) vs spectral co-clustering — the
 paper's headline is up-to-346x vs SCC; we report every registered
 ClusterEngine solver (numpy sequential = paper Alg.1; jax = TPU-native
 device-resident while_loop; jax_hostloop = the pre-engine host-driven
-loop; jax_sharded = edge-partitioned shard_map).
+loop; jax_sharded = edge-partitioned shard_map; jax_streamed =
+host-resident edges streamed through per-block programs).
+
+``--sizes NUxNVxKxDEG,...`` overrides the built-in solve-sweep ladder —
+the sweep is no longer capped at the historical 18k-node fast list; for
+the dedicated 10k/100k/1M ladder with memory + parity tracking see
+benchmarks/cluster_scale_bench.py.
 
 ``python benchmarks/fig2_efficiency.py --json [--out BENCH_cluster.json]``
 emits the machine-readable record that seeds the clustering perf
@@ -41,9 +47,25 @@ SIZES_FULL = SIZES_FAST + [(60_000, 24_000, 200, 24)]
 GAMMA = 8.0
 
 
-def _graphs(fast: bool):
+def parse_sizes(spec: str):
+    """'2000x1500x24x12,...' -> [(n_users, n_items, k_true, avg_deg)]."""
+    out = []
+    for part in spec.split(","):
+        dims = tuple(int(t) for t in part.strip().split("x"))
+        if len(dims) != 4 or min(dims) <= 0:
+            raise ValueError(f"bad --sizes entry {part!r}; "
+                             f"expected NUxNVxKxDEG of positive ints")
+        out.append(dims)
+    if not out:
+        raise ValueError("--sizes parsed to an empty list")
+    return out
+
+
+def _graphs(fast: bool, sizes=None):
     from repro.data import planted_coclusters
-    for nu, nv, k, deg in (SIZES_FAST if fast else SIZES_FULL):
+    if sizes is None:
+        sizes = SIZES_FAST if fast else SIZES_FULL
+    for nu, nv, k, deg in sizes:
         g, _, _ = planted_coclusters(nu, nv, k_true=k, avg_deg=deg,
                                      seed=0)
         yield g
@@ -59,15 +81,15 @@ def _timed_solve(engine, graph, wu, wv, budget):
     return dt, iters
 
 
-def bench(fast: bool = True):
+def bench(fast: bool = True, sizes=None):
     """-> list of JSON-able solve / grid_search records."""
     records = []
     last_graph = None
-    for g in _graphs(fast):
+    for g in _graphs(fast, sizes):
         last_graph = g
         wu, wv = make_weights(g, "hws")
         budget = int(0.25 * g.n_nodes)
-        solvers = ["jax", "jax_hostloop", "jax_sharded"]
+        solvers = ["jax", "jax_hostloop", "jax_sharded", "jax_streamed"]
         if g.n_nodes <= NUMPY_MAX_NODES:
             solvers.append("numpy")
         for name in solvers:
@@ -152,12 +174,16 @@ def main(argv=None):
                          "(e.g. BENCH_cluster.json)")
     ap.add_argument("--full", action="store_true",
                     help="include the largest synthetic graph")
+    ap.add_argument("--sizes", default=None,
+                    help="override the solve-sweep ladder: comma list of "
+                         "NUxNVxKxDEG, e.g. 2000x1500x24x12,60000x24000x200x24")
     args = ap.parse_args(argv)
+    sizes = parse_sizes(args.sizes) if args.sizes else None
     if not (args.json or args.out):
         run(fast=not args.full)
         return 0
     import jax
-    records = bench(fast=not args.full)
+    records = bench(fast=not args.full, sizes=sizes)
     record = {"bench": "cluster_solve",
               "platform": jax.default_backend(),
               "gamma": GAMMA,

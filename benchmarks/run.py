@@ -1,10 +1,12 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--fast | --full] [--only NAME]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
-Fast mode (default) uses the small-scale synthetic datasets; --full runs
-the paper-scale ones (slower, same orderings).
+Fast mode (the default, spellable explicitly as --fast) uses the
+small-scale synthetic datasets; --full runs the paper-scale ones
+(slower, same orderings — table11 then exercises the 1M-node ladder
+rung through the streamed solver).
 """
 from __future__ import annotations
 
@@ -24,12 +26,17 @@ MODULES = [
     "table6_scu",
     "table9_distance",
     "table11_large_scale",
+    "cluster_scale_bench",
 ]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--full", action="store_true")
+    speed = ap.add_mutually_exclusive_group()
+    speed.add_argument("--fast", action="store_true",
+                       help="small synthetic datasets (the default)")
+    speed.add_argument("--full", action="store_true",
+                       help="paper-scale datasets, incl. the 1M rung")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")

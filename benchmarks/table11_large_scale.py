@@ -1,45 +1,97 @@
 """Table 11 analogue: large-scale datasets (MovieLens/SteamGame-shaped
-synthetics). Spectral co-clustering is excluded above ~1M nodes exactly
-as in the paper (SVD does not finish); we compare clustering time +
-structure quality for BACO vs Louvain vs LP, and run a reduced training
-pass on the MovieLens-scale graph."""
+synthetics), riding the streamed edge-block solver.
+
+The BACO row builds through ``ClusterEngine(solver="jax_streamed")`` so
+the sketch construction never materializes the full edge list on
+device; ``fast=False`` runs the 1M-node ladder rung (the same shape
+tracked in BENCH_cluster.json), ``fast=True`` a quarter-scale
+MovieLens-shaped graph.
+
+Spectral co-clustering is excluded above ~1M nodes as in the paper —
+but the exclusion is MEASURED here, not asserted: we time SCC on a
+small size ladder, fit the log-log runtime slope, and extrapolate to
+the large graph's node count. The fitted hours estimate is printed in
+the exclusion row (paper reports >10h).
+"""
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
 
-from benchmarks.common import Row, cluster_metrics, get_dataset, sketch_for
+from benchmarks.common import Row, cluster_metrics
 from repro.core import ClusterEngine, build_sketch
+
+# small ladder for the SCC runtime fit (node counts; SVD-dominated)
+SCC_FIT_SIZES = [(1_500, 500), (3_000, 1_000), (6_000, 2_000)]
+
+
+def _planted(nu, nv, k, deg, seed=0):
+    from repro.data import planted_coclusters
+    g, _, _ = planted_coclusters(nu, nv, k_true=k, avg_deg=deg, seed=seed)
+    return g
+
+
+def scc_exclusion(rows: Row, name: str, target_nodes: int) -> float:
+    """Measure SCC on the small ladder, fit t ~ n^slope, extrapolate
+    to ``target_nodes``. Returns the estimated hours."""
+    ns, ts = [], []
+    for i, (nu, nv) in enumerate(SCC_FIT_SIZES):
+        g = _planted(nu, nv, k=24, deg=8)
+        budget = int(0.125 * g.n_nodes)
+        reps = 3 if i == 0 else 2   # first size also eats one-time warmup
+        dt = float("inf")
+        for _ in range(reps):       # best-of: strip warmup/JIT noise
+            t0 = time.time()
+            build_sketch("scc", g, budget=budget)
+            dt = min(dt, time.time() - t0)
+        ns.append(g.n_nodes)
+        ts.append(max(dt, 1e-6))
+        rows.add(f"table11/scc_fit/n{g.n_nodes}", dt * 1e6,
+                 scc_s=round(dt, 3))
+    slope, icept = np.polyfit(np.log(ns), np.log(ts), 1)
+    est_h = math.exp(icept + slope * math.log(target_nodes)) / 3600.0
+    rows.add(f"table11/{name}/scc", float("nan"),
+             note=f"'excluded: measured t~n^{slope:.2f} extrapolates to "
+                  f"~{est_h:.1f}h at n={target_nodes} (paper: >10h)'")
+    return est_h
 
 
 def run(fast: bool = True):
     rows = Row()
-    name = "movielens_l"
     if fast:
-        # fast mode: quarter-scale movielens
-        from repro.data import planted_coclusters
-        from repro.core.graph import BipartiteGraph
-        g, _, _ = planted_coclusters(50_000, 16_000, k_true=200,
-                                     avg_deg=40, seed=0)
-        train = g
+        # fast mode: quarter-scale movielens shape
+        name = "movielens_q"
+        train = _planted(50_000, 16_000, k=200, deg=40)
+        methods = ["baco", "louvain_modularity", "lp"]
     else:
-        _, _, _, train, _ = get_dataset(name)
+        # the 1M-node ladder rung (matches cluster_scale_bench "1m")
+        from benchmarks.cluster_scale_bench import AVG_DEG, RUNGS
+        name = "ladder_1m"
+        nu, nv, k = RUNGS["1m"]
+        train = _planted(nu, nv, k=k, deg=AVG_DEG)
+        # graph-baseline sweeps (python Louvain) do not scale here; the
+        # comparison at shared sizes lives in the fast row + fig2
+        methods = ["baco", "lp"]
     budget = int(0.125 * train.n_nodes)
-    for m in ["baco", "louvain_modularity", "lp"]:
+    for m in methods:
         t0 = time.time()
-        sk = (ClusterEngine().build(train, d=64, ratio=0.125)
-              if m == "baco" else build_sketch(m, train, budget=budget))
+        if m == "baco":
+            # streamed solver: edges stay host-side during the solve
+            sk = ClusterEngine(solver="jax_streamed").build(
+                train, d=64, ratio=0.125)
+        else:
+            sk = build_sketch(m, train, budget=budget)
         dt = time.time() - t0
         cm = cluster_metrics(train, sk)
         rows.add(f"table11/{name}/{m}", dt * 1e6,
                  per_edge_us=dt / train.n_edges * 1e6,
                  params=sk.n_params(64), **cm)
-    rows.add(f"table11/{name}/scc", float("nan"),
-             note="'excluded: SVD does not finish at this scale (paper: "
-                  ">10h)'")
+    scc_exclusion(rows, name, train.n_nodes)
     return rows.emit()
 
 
 if __name__ == "__main__":
-    run(fast=True)
+    import sys
+    run(fast="--full" not in sys.argv)

@@ -1,17 +1,19 @@
 """BACO core: balanced co-clustering for embedding table compression."""
-from .graph import BipartiteGraph
+from .graph import BipartiteGraph, node_aligned_bounds, pad_rung
 from .sketch import Sketch, compact_labels
 from .weights import make_weights, WEIGHT_SCHEMES
 from .engine import (ClusterEngine, ClusterSolver, available_solvers,
                      get_solver, normalize_solver, register_solver)
 from .baco import baco_build, fit_gamma, secondary_user_labels
 from .baselines import build_sketch, BASELINES
-from . import metrics, solver_jax, solver_numpy
+from . import candidates, metrics, solver_jax, solver_numpy
 
 __all__ = [
-    "BipartiteGraph", "Sketch", "compact_labels", "make_weights",
+    "BipartiteGraph", "node_aligned_bounds", "pad_rung", "Sketch",
+    "compact_labels", "make_weights",
     "WEIGHT_SCHEMES", "ClusterEngine", "ClusterSolver", "available_solvers",
     "get_solver", "normalize_solver", "register_solver",
     "baco_build", "fit_gamma", "secondary_user_labels",
-    "build_sketch", "BASELINES", "metrics", "solver_jax", "solver_numpy",
+    "build_sketch", "BASELINES", "candidates", "metrics", "solver_jax",
+    "solver_numpy",
 ]

@@ -24,9 +24,24 @@ Solvers:
   * "jax_hostloop" the pre-engine host-driven loop (one dispatch and a
                    full labels transfer per sweep); never auto-selected,
                    kept as the benchmark/bit-for-bit reference.
+  * "jax_streamed" the edge-block streamed solve (solver_jax.
+                   lp_solve_streamed): edges stay host-side and sweep
+                   through one compiled per-block program, bit-for-bit
+                   equal to "jax" with O(nodes + block) device
+                   residency — the million-node path. Never
+                   auto-selected (the in-memory solver is faster when
+                   the graph fits); size via ClusterEngine(block_edges=
+                   ...), telemetry on the solver's ``last_stats``.
 
 Auto-selection (solver=None/"auto"): "jax_sharded" when a mesh is given
 or more than one device is visible, else "jax".
+
+ClusterEngine also carries the ``candidates`` knob ("exact" default |
+"minhash"): the stream layer's cold-assign and refresh read it to prune
+per-node candidate labels through core.candidates (minhash bucket
+nomination). It lives here so call sites configure ONE engine object,
+but engine.solve() itself is always exact — pruning is an explicit
+opt-in of the assignment paths that measure their recall.
 """
 from __future__ import annotations
 
@@ -58,6 +73,7 @@ class ClusterSolver:
     name: str = "?"
     batched_grid: bool = False    # solve_many runs lanes concurrently
     accepts_mesh: bool = False    # solve(..., mesh=) is meaningful
+    accepts_block_edges: bool = False   # solve(..., block_edges=) meaningful
     auto_eligible: bool = True    # may be picked by auto-selection
 
     def solve(self, graph: BipartiteGraph, wu, wv, gamma: float,
@@ -151,6 +167,30 @@ class _ShardedSolver(ClusterSolver):
                                                mesh=mesh)
 
 
+class _StreamedSolver(ClusterSolver):
+    name = "jax_streamed"
+    accepts_block_edges = True
+    auto_eligible = False     # in-memory "jax" wins whenever edges fit
+
+    def __init__(self):
+        # sweep telemetry of the most recent solve (blocks, per-sweep
+        # seconds, peak device bytes) — how benchmarks read the streamed
+        # path's numbers without importing the solver module directly
+        self.last_stats: dict = {}
+
+    def solve(self, graph, wu, wv, gamma, budget=None, max_iters=8,
+              init_labels=None, *, mesh=None, block_edges=None):
+        from . import solver_jax
+        stats: dict = {}
+        out = solver_jax.lp_solve_streamed(
+            graph, wu, wv, gamma, budget, max_iters,
+            init_labels=init_labels,
+            block_edges=int(block_edges) if block_edges else 1 << 20,
+            stats=stats)
+        self.last_stats = stats
+        return out
+
+
 class _NumpySolver(ClusterSolver):
     name = "numpy"
     auto_eligible = False     # paper-faithful reference, orders slower
@@ -169,6 +209,7 @@ class _NumpySolver(ClusterSolver):
 register_solver(_JaxSolver())
 register_solver(_JaxHostloopSolver())
 register_solver(_ShardedSolver())
+register_solver(_StreamedSolver())
 register_solver(_NumpySolver())
 
 
@@ -286,13 +327,29 @@ class ClusterEngine:
     """Routes co-clustering work through the selected solver.
 
     solver: explicit override ("jax" | "jax_sharded" | "numpy" |
-            "jax_hostloop" | None/"auto").
+            "jax_hostloop" | "jax_streamed" | None/"auto").
     mesh:   1-D device mesh for "jax_sharded" (defaults to every local
             device); passing a mesh also steers auto-selection to the
             sharded solver.
+    candidates: "exact" (default) scores every neighbor label;
+            "minhash" lets the stream layer's cold-assign/refresh prune
+            per-node candidates via core.candidates (engine.solve()
+            itself is always exact).
+    block_edges: nominal edges per streamed block for "jax_streamed"
+            (node-aligned; any value is bit-for-bit exact — it only
+            trades dispatches against per-block memory).
     """
     solver: Optional[str] = None
     mesh: object = None
+    candidates: str = "exact"
+    block_edges: Optional[int] = None
+
+    def __post_init__(self):
+        if self.candidates not in ("exact", "minhash"):
+            raise ValueError(f"candidates must be 'exact'|'minhash', "
+                             f"got {self.candidates!r}")
+        if self.block_edges is not None and int(self.block_edges) <= 0:
+            raise ValueError("block_edges must be positive")
 
     def resolve(self) -> ClusterSolver:
         if self.solver is not None and self.solver != "auto":
@@ -305,7 +362,10 @@ class ClusterEngine:
         return get_solver("jax")
 
     def _mesh_kw(self, solver: ClusterSolver) -> dict:
-        return {"mesh": self.mesh} if solver.accepts_mesh else {}
+        kw = {"mesh": self.mesh} if solver.accepts_mesh else {}
+        if solver.accepts_block_edges and self.block_edges:
+            kw["block_edges"] = int(self.block_edges)
+        return kw
 
     # -- one solve ---------------------------------------------------------
     def solve(self, graph: BipartiteGraph, wu, wv, gamma: float,

@@ -35,6 +35,7 @@ benchmark reference the while_loop is validated bit-for-bit against.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Tuple
 
 import jax
@@ -45,7 +46,7 @@ from .graph import BipartiteGraph, pad_rung
 
 __all__ = ["lp_solve", "lp_solve_grid", "lp_solve_hostloop", "lp_step",
            "count_side_labels", "solve_loop", "lp_cold_assign",
-           "lp_solve_capped"]
+           "lp_solve_capped", "lp_solve_streamed"]
 
 # plain float, not a device array: importing this module must never
 # initialize the jax backend (dryrun sets XLA_FLAGS first)
@@ -442,9 +443,31 @@ def _cold_side(node_tail, opp_tail, opp_labels, w_self_side, own_side,
     return np.asarray(out)[:n_new]
 
 
+def _cand_edge_mask(node_tail: np.ndarray, edge_lab: np.ndarray,
+                    flat: np.ndarray, indptr: np.ndarray,
+                    n_labels: int) -> np.ndarray:
+    """bool[E_tail]: which cold edges carry a candidate label that
+    survives pruning. ``flat``/``indptr`` are per-cold-node candidate
+    label lists (CSR over the 0-based cold nodes, labels SORTED within
+    each node's slice — core.candidates emits exactly this). Vectorized
+    membership: fuse (node, label) into one int64 key and searchsorted
+    the fused candidate keys (ascending because nodes are grouped in
+    order and labels sorted within a node)."""
+    if flat.size == 0 or node_tail.size == 0:
+        return np.zeros(node_tail.shape, bool)
+    m = np.int64(n_labels) + 1
+    reps = np.diff(np.asarray(indptr, np.int64))
+    ckeys = np.repeat(np.arange(reps.size, dtype=np.int64), reps) * m \
+        + np.asarray(flat, np.int64)
+    keys = node_tail.astype(np.int64) * m + np.asarray(edge_lab, np.int64)
+    pos = np.minimum(np.searchsorted(ckeys, keys), ckeys.size - 1)
+    return ckeys[pos] == keys
+
+
 def lp_cold_assign(graph: BipartiteGraph, labels, w_users, w_items,
                    gamma: float, n_new_users: int = 0,
-                   n_new_items: int = 0) -> np.ndarray:
+                   n_new_items: int = 0,
+                   cand_labels: dict | None = None) -> np.ndarray:
     """Place brand-new users/items (index suffixes of their sides) into
     the existing partition with ONE device-resident LP half-step each,
     over only their incident edges.
@@ -464,6 +487,18 @@ def lp_cold_assign(graph: BipartiteGraph, labels, w_users, w_items,
     padded onto a power-of-two shape ladder so replay streams of
     arbitrary arrival sizes compile a bounded set of programs. Returns
     the updated labels (host int32[n_nodes]); old nodes never move.
+
+    ``cand_labels`` (optional) prunes the candidate universe per cold
+    node: {"user"/"item": (flat, indptr)} CSR lists of allowed labels
+    (sorted within each node's slice — ``core.candidates`` builds
+    these). Edges whose neighbor label is outside the node's list are
+    dropped BEFORE the half-step, so the sorted/padded edge tail — the
+    O(labels-scored) work — shrinks to O(candidates). The node's own
+    (fresh singleton) label always stays a candidate, so a pruned cold
+    node can still found a new cluster; and since no opposite-side node
+    carries a fresh singleton label, dropping edges never perturbs the
+    own-score term. Exactness then reduces to candidate recall: if the
+    exact argmax label is in the list, the assignment is identical.
     """
     nu, nv, n = graph.n_users, graph.n_items, graph.n_nodes
     lab = np.array(labels, dtype=np.int32, copy=True)
@@ -476,21 +511,282 @@ def lp_cold_assign(graph: BipartiteGraph, labels, w_users, w_items,
         return lab
     wu = np.asarray(w_users, np.float32)
     wv = np.asarray(w_items, np.float32)
+
+    def prune(side, node_tail, opp_tail, opp_lab, own_lab):
+        if cand_labels is None or side not in cand_labels:
+            return node_tail, opp_tail
+        flat, indptr = cand_labels[side]
+        edge_lab = opp_lab[opp_tail]
+        keep = _cand_edge_mask(node_tail, edge_lab, np.asarray(flat),
+                               np.asarray(indptr), n)
+        keep |= edge_lab == own_lab[node_tail]
+        return node_tail[keep], opp_tail[keep]
+
     if n_new_users:
         u0 = nu - n_new_users
         lo = int(np.searchsorted(graph.edge_u, u0))
+        node_tail = (graph.edge_u[lo:] - u0).astype(np.int32)
+        node_tail, opp_tail = prune("user", node_tail, graph.edge_v[lo:],
+                                    lab[nu:], lab[u0:nu])
         lab[u0:nu] = _cold_side(
-            (graph.edge_u[lo:] - u0).astype(np.int32), graph.edge_v[lo:],
+            node_tail, opp_tail,
             lab[nu:], wu[u0:], lab[u0:nu], wv, gamma, n_new_users, n)
     if n_new_items:
         v0 = nv - n_new_items
-        ev_byv = graph.edge_v[graph.perm_by_item]
-        eu_byv = graph.edge_u[graph.perm_by_item]
+        ev_byv, eu_byv = graph.edges_by_item()
         lo = int(np.searchsorted(ev_byv, v0))
+        node_tail = (ev_byv[lo:] - v0).astype(np.int32)
+        node_tail, opp_tail = prune("item", node_tail, eu_byv[lo:],
+                                    lab[:nu], lab[nu + v0:])
         lab[nu + v0:] = _cold_side(
-            (ev_byv[lo:] - v0).astype(np.int32), eu_byv[lo:],
+            node_tail, opp_tail,
             lab[:nu], wv[v0:], lab[nu + v0:], wu, gamma, n_new_items, n)
     return lab
+
+
+# ---------------------------------------------------------------------------
+# streamed edge-block solve: million-node graphs without device-resident
+# edge lists
+# ---------------------------------------------------------------------------
+# The half-step is a per-node reduction over that node's incident edges:
+# group counts, candidate argmax and own-label counts never mix edges of
+# different nodes, and the only cross-node coupling — the per-label
+# opposite-side weight totals W(k) — is an O(n) quantity computed from
+# the LABELS, not the edges. So the edge list can stay host-side and be
+# swept in fixed-size node-aligned blocks (graph.edge_block_bounds): one
+# compiled per-block program runs the same sort/scan passes as
+# ``_half_step`` over its block and scatters each finished node's
+# (best score, best label, own count) into donated [n_side]
+# accumulators; a commit program applies the move rule once every block
+# has been accumulated. Node alignment is what keeps this exact: a
+# node's (node, label) groups are complete within its block, so every
+# count, score and tie-break is bit-for-bit the in-memory value for ANY
+# nominal block size (tests/test_scale.py sweeps 1 edge .. all edges).
+# Accumulate-then-commit also preserves Algorithm 1's side-synchronous
+# order: no user label changes until every user block has been scored
+# against the SAME fixed item labels (and vice versa), exactly like the
+# in-memory half-step.
+def _stream_block_impl(acc_best, acc_lab, acc_own, node_g, opp_idx,
+                       opp_labels, w_self, w_other_by_label, own_labels,
+                       gamma, *, n_side: int, n_labels: int):
+    """Score one node-aligned edge block and fold the finished nodes'
+    results into the accumulators.
+
+    node_g: int32[B] global updating-side ids, sorted ascending; pad
+      entries carry the sentinel id ``n_side`` (sorts to the end, and
+      every scatter at an out-of-bounds index is dropped).
+    opp_idx: int32[B] opposite-side endpoint (pad 0 — harmless, the pad
+      rows never scatter).
+    """
+    b = node_g.shape[0]
+    idx = jnp.arange(b, dtype=jnp.int32)
+    cand = opp_labels[opp_idx]
+    # identical group machinery to _half_step, over the block only
+    node_s, lab_s = jax.lax.sort((node_g, cand), num_keys=2)
+    new_grp = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_),
+        (node_s[1:] != node_s[:-1]) | (lab_s[1:] != lab_s[:-1])])
+    is_last = jnp.concatenate([new_grp[1:], jnp.ones((1,), jnp.bool_)])
+    start = jax.lax.cummax(jnp.where(new_grp, idx, 0))
+    end = jnp.flip(jax.lax.cummin(jnp.flip(jnp.where(is_last, idx, b - 1))))
+    cnt = (end - start + 1).astype(jnp.float32)
+    score = cnt - gamma * w_self[node_s] * w_other_by_label[lab_s]
+
+    def _comb(a, c):
+        n1, s1, l1 = a
+        n2, s2, l2 = c
+        keep = (n1 == n2) & (s1 >= s2)
+        return n2, jnp.where(keep, s1, s2), jnp.where(keep, l1, l2)
+
+    _, run_s, run_l = jax.lax.associative_scan(
+        _comb, (node_s, score, lab_s))
+    # per-node readout at the last edge of each node segment, scattered
+    # straight into the accumulators (pads and interior edges target the
+    # out-of-bounds sentinel and are dropped)
+    new_node = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_), node_s[1:] != node_s[:-1]])
+    last_node = jnp.concatenate([new_node[1:], jnp.ones((1,), jnp.bool_)])
+    tgt = jnp.where(last_node, node_s, jnp.int32(n_side))
+    acc_best = acc_best.at[tgt].set(run_s)
+    acc_lab = acc_lab.at[tgt].set(run_l)
+    # own-label counts: exact int32 cumsum over the node's block-local run
+    own_hit = (lab_s == own_labels[node_s]).astype(jnp.int32)
+    cs = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(own_hit)])
+    node_start = jax.lax.cummax(jnp.where(new_node, idx, 0))
+    own_cnt = (cs[idx + 1] - cs[node_start]).astype(jnp.float32)
+    acc_own = acc_own.at[tgt].set(own_cnt)
+    return acc_best, acc_lab, acc_own
+
+
+def _stream_commit_impl(acc_best, acc_lab, acc_own, w_self,
+                        w_other_by_label, own_labels, gamma, *,
+                        n_labels: int):
+    """The move rule of ``_half_step``, applied once per half-step after
+    every block has been accumulated. Nodes no block touched (edgeless)
+    keep acc_best == _NEG / acc_lab == n_labels and never move."""
+    own_score = acc_own - gamma * w_self * w_other_by_label[own_labels]
+    move = (acc_best > own_score) & (acc_lab < n_labels)
+    return jnp.where(move, acc_lab, own_labels).astype(jnp.int32)
+
+
+@functools.cache
+def _stream_jits(donate: bool):
+    """(block, commit, w_by_label) jitted programs; accumulator donation
+    only where the backend honors it (donating on CPU just warns)."""
+    kw = {"donate_argnums": (0, 1, 2)} if donate else {}
+    block = functools.partial(jax.jit, static_argnames=("n_side", "n_labels"),
+                              **kw)(_stream_block_impl)
+    commit = functools.partial(jax.jit, static_argnames=("n_labels",))(
+        _stream_commit_impl)
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def w_by_label(w, labels, *, n):
+        return jax.ops.segment_sum(w, labels, num_segments=n)
+
+    return block, commit, w_by_label
+
+
+def _stream_plan(graph: BipartiteGraph, block_edges: int):
+    """Host-side sweep plan: padded numpy (node, opp) blocks for both
+    edge orientations. Label-independent, so one plan serves every
+    sweep of a solve (and is memoized on the graph for re-solves)."""
+    def side_blocks(node_arr, opp_arr, bounds, n_side):
+        widths = np.diff(bounds)
+        pad = pad_rung(int(widths.max()) if widths.size else 1)
+        out = []
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            lo, hi = int(lo), int(hi)
+            nb = np.full(pad, n_side, np.int32)
+            ob = np.zeros(pad, np.int32)
+            nb[:hi - lo] = node_arr[lo:hi]
+            ob[:hi - lo] = opp_arr[lo:hi]
+            out.append((nb, ob))
+        return out, pad
+
+    def build():
+        ev_byv, eu_byv = graph.edges_by_item()
+        ub, upad = side_blocks(graph.edge_u, graph.edge_v,
+                               graph.edge_block_bounds("user", block_edges),
+                               graph.n_users)
+        vb, vpad = side_blocks(ev_byv, eu_byv,
+                               graph.edge_block_bounds("item", block_edges),
+                               graph.n_items)
+        return {"user": (ub, upad), "item": (vb, vpad)}
+
+    return graph._memo(f"stream_plan/{int(block_edges)}", build)
+
+
+def _streamed_half(blocks, n_side: int, n_labels: int, opp_labels, w_self,
+                   w_by_label, own_labels, gamma, jits):
+    block_fn, commit_fn, _ = jits
+    acc_best = jnp.full((n_side,), _NEG, jnp.float32)
+    acc_lab = jnp.full((n_side,), n_labels, jnp.int32)
+    acc_own = jnp.zeros((n_side,), jnp.float32)
+    nxt = (jax.device_put(blocks[0][0]), jax.device_put(blocks[0][1])) \
+        if blocks else None
+    for i in range(len(blocks)):
+        cur = nxt
+        out = block_fn(acc_best, acc_lab, acc_own, cur[0], cur[1],
+                       opp_labels, w_self, w_by_label, own_labels, gamma,
+                       n_side=n_side, n_labels=n_labels)
+        if i + 1 < len(blocks):
+            # enqueue the next block's H2D copy while the current block
+            # computes (dispatch is async) — the double buffer
+            nxt = (jax.device_put(blocks[i + 1][0]),
+                   jax.device_put(blocks[i + 1][1]))
+        acc_best, acc_lab, acc_own = out
+    return commit_fn(acc_best, acc_lab, acc_own, w_self, w_by_label,
+                     own_labels, gamma, n_labels=n_labels)
+
+
+def _peak_device_bytes() -> int | None:
+    """Allocator-reported peak bytes where the backend exposes it
+    (TPU/GPU); None on backends without memory_stats (CPU)."""
+    try:
+        ms = jax.local_devices()[0].memory_stats()
+        if ms and ms.get("peak_bytes_in_use"):
+            return int(ms["peak_bytes_in_use"])
+    except Exception:
+        pass
+    return None
+
+
+def lp_solve_streamed(graph: BipartiteGraph, w_users, w_items, gamma: float,
+                      budget: int | None = None, max_iters: int = 8,
+                      init_labels: np.ndarray | None = None,
+                      block_edges: int = 1 << 20,
+                      stats: dict | None = None) -> Tuple[np.ndarray, int]:
+    """``lp_solve`` without ever materializing the edge list on device.
+
+    Edges stay host-side numpy; each sweep streams node-aligned blocks
+    of at most ``block_edges`` edges through one compiled per-block
+    program (donated accumulators, next block's H2D copy double-buffered
+    behind the current block's compute). Device residency is O(n +
+    block), not O(E). Labels are BIT-FOR-BIT equal to ``lp_solve`` for
+    any block size (node alignment keeps per-node groups block-local;
+    the per-label weight totals are computed from labels with the same
+    segment_sum; the commit applies the identical move rule), and the
+    sweep/budget/convergence semantics replicate ``solve_loop`` —
+    including counting the converged-detect sweep.
+
+    ``stats`` (optional dict) is filled with the sweep telemetry the
+    scaling ladder records: blocks per side, padded block length, per-
+    sweep seconds, blocks/s, and peak device bytes where the backend
+    reports them (else a documented residency estimate).
+    """
+    n_users, n_items = graph.n_users, graph.n_items
+    n = n_users + n_items
+    plan = _stream_plan(graph, int(block_edges))
+    jits = _stream_jits(jax.default_backend() != "cpu")
+    _, _, w_by_label_fn = jits
+    wu = jnp.asarray(np.asarray(w_users, np.float32))
+    wv = jnp.asarray(np.asarray(w_items, np.float32))
+    labels = _init_labels(graph, init_labels)
+    g = jnp.float32(gamma)
+    bud = 0 if budget is None else int(budget)
+    it = 0
+    done = False
+    sweep_s = []
+    while not done and it < max_iters:
+        t0 = time.perf_counter()
+        item_labels = labels[n_users:]
+        w_items_by = w_by_label_fn(wv, item_labels, n=n)
+        new_u = _streamed_half(plan["user"][0], n_users, n, item_labels,
+                               wu, w_items_by, labels[:n_users], g, jits)
+        w_users_by = w_by_label_fn(wu, new_u, n=n)
+        new_v = _streamed_half(plan["item"][0], n_items, n, new_u,
+                               wv, w_users_by, item_labels, g, jits)
+        new = jnp.concatenate([new_u, new_v])
+        ku, kv = count_side_labels(new, n_users=n_users, n_items=n_items)
+        within = bud > 0 and int(ku) + int(kv) <= bud
+        converged = bool(jnp.array_equal(new, labels))
+        new.block_until_ready()
+        sweep_s.append(time.perf_counter() - t0)
+        labels = new
+        it += 1
+        done = within or converged
+    if stats is not None:
+        nb = len(plan["user"][0]) + len(plan["item"][0])
+        upad, vpad = plan["user"][1], plan["item"][1]
+        total = sum(sweep_s)
+        peak = _peak_device_bytes()
+        # residency estimate: labels old+new [n], three accumulators +
+        # weights + own labels per side, one [n] weight-total vector,
+        # and 2x double-buffered (node, opp) int32 block pair
+        est = 4 * (2 * n + 5 * max(n_users, n_items) + n
+                   + 4 * max(upad, vpad))
+        stats.update(
+            n_blocks_user=len(plan["user"][0]),
+            n_blocks_item=len(plan["item"][0]),
+            block_pad_user=int(upad), block_pad_item=int(vpad),
+            block_edges=int(block_edges), sweeps=int(it),
+            sweep_s=[round(s, 4) for s in sweep_s],
+            sweep_ms=round(min(sweep_s) * 1e3, 2) if sweep_s else 0.0,
+            blocks_per_s=round(it * nb / total, 2) if total > 0 else 0.0,
+            peak_device_bytes=peak if peak is not None else est,
+            peak_bytes_source="memory_stats" if peak is not None
+            else "residency_estimate")
+    return np.asarray(labels), it
 
 
 def lp_solve_hostloop(graph: BipartiteGraph, w_users, w_items, gamma: float,

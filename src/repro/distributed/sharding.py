@@ -185,28 +185,63 @@ def data_mesh(n_devices: Optional[int] = None) -> Mesh:
 
 
 def edge_partition(node_of_edge: np.ndarray, opp_of_edge: np.ndarray,
-                   n_side: int, n_shards: int):
+                   n_side: int, n_shards: int, bounds=None):
     """Split edges (sorted by updating-side node) into per-shard blocks.
 
-    Nodes are partitioned into ``n_shards`` contiguous ranges of
-    ``nodes_per_shard``; each shard's edge block is the contiguous run of
-    edges into its range, padded to the max block length with sentinel
-    edges (local node id == nodes_per_shard, dropped by the segment ops).
+    Default (bounds=None): nodes are partitioned into ``n_shards``
+    contiguous ranges of ``nodes_per_shard``; each shard's edge block is
+    the contiguous run of edges into its range, padded to the max block
+    length with sentinel edges (local node id == nodes_per_shard,
+    dropped by the segment ops). Returns (node_local int32[S*Emax],
+    opp int32[S*Emax], nodes_per_shard) — flat, ready for a P("edge")
+    in_spec.
 
-    Returns (node_local int32[S*Emax], opp int32[S*Emax],
-    nodes_per_shard) — flat, ready for a P("edge") in_spec.
+    bounds: optional node-aligned EDGE offsets (``node_aligned_bounds``
+    / ``graph.edge_block_bounds``) of length ``n_shards + 1`` — the same
+    blocking primitive the streamed solver sweeps, composed here into
+    the shard layout. Shards then own edge-BALANCED blocks (equal node
+    ranges skew per-device edge counts badly on power-law graphs; the
+    scale bench records the imbalance factor), node alignment is
+    validated, and the return gains each shard's first owned node:
+    (node_local, opp, nodes_per_shard, node_starts int64[S + 1]) with
+    local ids relative to ``node_starts[s]``.
     """
-    nps = max(1, -(-n_side // n_shards))
-    bounds = np.searchsorted(node_of_edge,
-                             np.arange(n_shards + 1, dtype=np.int64) * nps)
+    if bounds is None:
+        nps = max(1, -(-n_side // n_shards))
+        bounds = np.searchsorted(
+            node_of_edge, np.arange(n_shards + 1, dtype=np.int64) * nps)
+        emax = max(1, int(np.max(np.diff(bounds))))
+        node_local = np.full((n_shards, emax), nps, dtype=np.int32)
+        opp = np.zeros((n_shards, emax), dtype=np.int32)
+        for s in range(n_shards):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            node_local[s, :hi - lo] = node_of_edge[lo:hi] - s * nps
+            opp[s, :hi - lo] = opp_of_edge[lo:hi]
+        return node_local.reshape(-1), opp.reshape(-1), nps
+    bounds = np.asarray(bounds, np.int64)
+    e = int(node_of_edge.shape[0])
+    if bounds.size != n_shards + 1 or bounds[0] != 0 or bounds[-1] != e:
+        raise ValueError(f"bounds must be {n_shards + 1} offsets covering "
+                         f"[0, {e}], got shape {bounds.shape}")
+    cuts = bounds[1:-1]
+    inner = cuts[(cuts > 0) & (cuts < e)]
+    if inner.size and np.any(node_of_edge[inner - 1] == node_of_edge[inner]):
+        raise ValueError("bounds are not node-aligned: a node's edge run "
+                         "straddles a shard cut")
+    node_starts = np.full(n_shards + 1, n_side, np.int64)
+    if e:
+        node_starts[:-1] = node_of_edge[np.minimum(bounds[:-1], e - 1)]
+    else:
+        node_starts[:-1] = 0
+    nps = max(1, int(np.max(np.diff(node_starts))))
     emax = max(1, int(np.max(np.diff(bounds))))
     node_local = np.full((n_shards, emax), nps, dtype=np.int32)
     opp = np.zeros((n_shards, emax), dtype=np.int32)
     for s in range(n_shards):
         lo, hi = int(bounds[s]), int(bounds[s + 1])
-        node_local[s, :hi - lo] = node_of_edge[lo:hi] - s * nps
+        node_local[s, :hi - lo] = node_of_edge[lo:hi] - node_starts[s]
         opp[s, :hi - lo] = opp_of_edge[lo:hi]
-    return node_local.reshape(-1), opp.reshape(-1), nps
+    return node_local.reshape(-1), opp.reshape(-1), nps, node_starts
 
 
 def pad_to_shards(x: np.ndarray, n_shards: int, per_shard: int,

@@ -109,14 +109,27 @@ class ColdStartAssigner:
 
         ``labels`` must already be grown (``grow_labels``) — a
         zero-delta call (no new nodes) is a strict label no-op.
+
+        With ``engine.candidates == "minhash"`` the half-step scores
+        only each cold node's minhash candidate labels
+        (``core.candidates.cold_candidate_sets``) — O(bucket +
+        neighbor_cap) per node instead of O(degree), identical to exact
+        whenever the true argmax is in the candidate set (the measured
+        recall in BENCH_cluster.json).
         """
         labels = np.asarray(labels, np.int32)
         if n_new_users == 0 and n_new_items == 0:
             return labels, AssignStats(0, 0, 0, 0, 0.0)
         t0 = time.perf_counter()
         wu, wv = make_weights(graph, self.scheme)
+        cand = None
+        if self.engine.candidates == "minhash":
+            from repro.core.candidates import cold_candidate_sets
+            cand = cold_candidate_sets(graph, labels, n_new_users,
+                                       n_new_items)
         out = solver_jax.lp_cold_assign(graph, labels, wu, wv, self.gamma,
-                                        n_new_users, n_new_items)
+                                        n_new_users, n_new_items,
+                                        cand_labels=cand)
         ms = (time.perf_counter() - t0) * 1e3
         nu = graph.n_users
         moved_u = int(np.sum(out[nu - n_new_users:nu]
@@ -159,10 +172,23 @@ class ColdStartAssigner:
         self-limiting — an over-merged probe scores lower modularity
         and loses to the current gamma. The winning gamma becomes the
         assigner's resolution going forward.
+
+        With ``engine.candidates == "minhash"`` the refresh sweeps run
+        over a candidate-pruned copy of the graph
+        (``core.candidates.prune_graph``, built ONCE per refresh from
+        the warm-start labels): each node scores only labels its
+        minhash buckets nominate. Approximate by construction — churn
+        and the modularity used for gamma selection are still measured
+        on the FULL graph, so a bad pruning loses the probe contest
+        rather than silently steering the partition.
         """
         from repro.core.metrics import bipartite_modularity
         labels = np.asarray(labels, np.int32)
         t0 = time.perf_counter()
+        solve_graph = graph
+        if self.engine.candidates == "minhash":
+            from repro.core.candidates import prune_graph
+            solve_graph, _kept = prune_graph(graph, labels)
         wu, wv = make_weights(graph, self.scheme)
         nu = graph.n_users
         gammas = [self.gamma] + ([self.gamma / 2.0, self.gamma / 4.0]
@@ -171,8 +197,8 @@ class ColdStartAssigner:
         best = None
         seed = labels
         for g in gammas:
-            new, iters = self._solve(graph, wu, wv, g, budget, max_iters,
-                                     seed)
+            new, iters = self._solve(solve_graph, wu, wv, g, budget,
+                                     max_iters, seed)
             seed = new                  # fine -> coarse warm chain
             if primary is None:
                 primary = (new, iters, g)

@@ -1,0 +1,253 @@
+"""Million-node scaling pieces: the streamed edge-block solver
+(node-aligned block plans, bitwise parity with the in-memory solver at
+ANY block size, budget/warm-start semantics, last_stats), the minhash
+candidate index (recall of the exact cold-assign argmax, pruned
+half-step agreement, prune_graph), the node-aligned compose mode of
+edge_partition, and the engine knobs that select all of it."""
+import numpy as np
+import pytest
+
+from repro.core import (BipartiteGraph, ClusterEngine, available_solvers,
+                        make_weights, node_aligned_bounds)
+from repro.core import candidates as cd
+from repro.core import solver_jax
+from repro.data import planted_coclusters
+from repro.distributed.sharding import edge_partition
+
+
+def planted(seed=0, nu=300, nv=90, k=8, deg=6):
+    g, _, _ = planted_coclusters(nu, nv, k_true=k, avg_deg=deg, seed=seed)
+    return g
+
+
+def setup(seed=0, **kw):
+    g = planted(seed, **kw)
+    wu, wv = make_weights(g, "hws")
+    return g, wu, wv
+
+
+# ---------------------------------------------------------------------------
+# node-aligned block bounds
+# ---------------------------------------------------------------------------
+def test_node_aligned_bounds_invariants():
+    g = planted()
+    indptr = g.user_csr()[0]
+    for be in (1, 3, 16, 100, g.n_edges, 10 * g.n_edges):
+        b = node_aligned_bounds(indptr, be)
+        assert b[0] == 0 and b[-1] == g.n_edges
+        assert np.all(np.diff(b) > 0)
+        # every boundary sits on a node boundary
+        assert np.all(np.isin(b, indptr))
+        # a block only exceeds the nominal size when a single node does
+        widths = np.diff(b)
+        deg = np.diff(indptr)
+        assert np.all((widths <= be) | (widths <= deg.max()))
+
+
+def test_node_aligned_bounds_empty():
+    b = node_aligned_bounds(np.zeros(5, np.int64), 4)
+    assert b[0] == 0 and b[-1] == 0
+
+
+# ---------------------------------------------------------------------------
+# streamed solver: bitwise parity at any block size
+# ---------------------------------------------------------------------------
+def test_streamed_bitwise_any_block_size():
+    g, wu, wv = setup()
+    ref, it_ref = solver_jax.lp_solve(g, wu, wv, 0.7, max_iters=8)
+    for be in (1, 7, 64, 1000, g.n_edges, 10 * g.n_edges):
+        lab, it = solver_jax.lp_solve_streamed(g, wu, wv, 0.7, max_iters=8,
+                                               block_edges=be)
+        assert it == it_ref, f"iters diverged at block_edges={be}"
+        assert np.array_equal(lab, ref), f"labels diverged at {be}"
+
+
+def test_streamed_budget_and_warm_start_parity():
+    g, wu, wv = setup(seed=3)
+    ref, it_ref = solver_jax.lp_solve(g, wu, wv, 0.7, budget=40,
+                                      max_iters=8)
+    lab, it = solver_jax.lp_solve_streamed(g, wu, wv, 0.7, budget=40,
+                                           max_iters=8, block_edges=50)
+    assert it == it_ref and np.array_equal(lab, ref)
+
+    init = np.arange(g.n_nodes, dtype=np.int32)
+    init[: g.n_users // 2] = 0
+    ref, it_ref = solver_jax.lp_solve(g, wu, wv, 0.4, max_iters=6,
+                                      init_labels=init)
+    lab, it = solver_jax.lp_solve_streamed(g, wu, wv, 0.4, max_iters=6,
+                                           init_labels=init, block_edges=64)
+    assert it == it_ref and np.array_equal(lab, ref)
+
+
+def test_streamed_stats():
+    g, wu, wv = setup()
+    stats = {}
+    solver_jax.lp_solve_streamed(g, wu, wv, 0.7, max_iters=8,
+                                 block_edges=100, stats=stats)
+    assert stats["n_blocks_user"] >= 2 and stats["n_blocks_item"] >= 2
+    assert stats["sweeps"] == len(stats["sweep_s"])
+    assert stats["blocks_per_s"] > 0
+    assert stats["peak_device_bytes"] > 0
+    assert stats["peak_bytes_source"] in ("memory_stats",
+                                          "residency_estimate")
+
+
+# ---------------------------------------------------------------------------
+# engine knobs
+# ---------------------------------------------------------------------------
+def test_streamed_solver_registered():
+    assert "jax_streamed" in available_solvers()
+
+
+def test_engine_streamed_matches_jax():
+    g, wu, wv = setup(seed=1)
+    ref, _ = ClusterEngine(solver="jax").solve(g, wu, wv, 0.7, max_iters=8)
+    eng = ClusterEngine(solver="jax_streamed", block_edges=500)
+    lab, _ = eng.solve(g, wu, wv, 0.7, max_iters=8)
+    assert np.array_equal(lab, ref)
+    assert eng.resolve().last_stats["block_edges"] == 500
+
+
+def test_engine_knob_validation():
+    with pytest.raises(ValueError):
+        ClusterEngine(candidates="lsh")
+    with pytest.raises(ValueError):
+        ClusterEngine(block_edges=0)
+    ClusterEngine(candidates="minhash", block_edges=4)   # valid
+
+
+# ---------------------------------------------------------------------------
+# minhash candidate index
+# ---------------------------------------------------------------------------
+def _cold_setup(seed=0, n_cold=40, gamma=0.7):
+    g, wu, wv = setup(seed=seed, nu=1200, nv=400, k=24, deg=8)
+    labels, _ = solver_jax.lp_solve(g, wu, wv, gamma, max_iters=8)
+    lab = np.asarray(labels, np.int32).copy()
+    nu = g.n_users
+    lab[nu - n_cold:nu] = np.arange(nu - n_cold, nu, dtype=np.int32)
+    return g, wu, wv, lab, n_cold, gamma
+
+
+def test_minhash_recall_of_exact_argmax():
+    g, wu, wv, lab, n_cold, gamma = _cold_setup()
+    exact = solver_jax.lp_cold_assign(g, lab, wu, wv, gamma,
+                                      n_new_users=n_cold)
+    cand = cd.cold_candidate_sets(g, lab, n_new_users=n_cold)
+    nu = g.n_users
+    cold = slice(nu - n_cold, nu)
+    recall = cd.candidate_recall(cand["user"], exact[cold], lab[cold])
+    assert recall >= 0.95, f"candidate recall {recall} < 0.95"
+
+
+def test_minhash_pruned_cold_assign_agrees():
+    g, wu, wv, lab, n_cold, gamma = _cold_setup(seed=2)
+    exact = solver_jax.lp_cold_assign(g, lab, wu, wv, gamma,
+                                      n_new_users=n_cold)
+    cand = cd.cold_candidate_sets(g, lab, n_new_users=n_cold)
+    pruned = solver_jax.lp_cold_assign(g, lab, wu, wv, gamma,
+                                       n_new_users=n_cold,
+                                       cand_labels=cand)
+    nu = g.n_users
+    cold = slice(nu - n_cold, nu)
+    agree = float(np.mean(pruned[cold] == exact[cold]))
+    assert agree >= 0.95, f"pruned cold-assign agreement {agree} < 0.95"
+    # candidate sets must be sublinear in the label universe
+    n_labels = np.unique(lab).size
+    per_node = np.diff(cand["user"][1])
+    assert per_node.mean() < 0.6 * n_labels
+
+
+def test_minhash_neighbor_nomination_exhaustive_for_low_degree():
+    # a cold node's own neighbors' labels are always candidates (up to
+    # neighbor_cap) — for degree <= cap the exact argmax is guaranteed
+    g, wu, wv, lab, n_cold, gamma = _cold_setup(seed=4)
+    cand = cd.cold_candidate_sets(g, lab, n_new_users=n_cold,
+                                  neighbor_cap=64)
+    flat, indptr = cand["user"]
+    nu = g.n_users
+    iu, eu = g.user_csr()
+    lv = lab[nu:]
+    for i in range(n_cold):
+        node = nu - n_cold + i
+        neigh_labels = np.unique(lv[eu[iu[node]:iu[node + 1]]])
+        got = flat[indptr[i]:indptr[i + 1]]
+        assert np.isin(neigh_labels, got).all()
+
+
+def test_prune_graph_keeps_own_cluster_edges():
+    g, wu, wv = setup(seed=5, nu=800, nv=300, k=16)
+    labels, _ = solver_jax.lp_solve(g, wu, wv, 0.5, max_iters=8)
+    pruned, kept = cd.prune_graph(g, labels)
+    assert 0.0 < kept <= 1.0
+    assert pruned.n_users == g.n_users and pruned.n_items == g.n_items
+    # every intra-cluster edge survives
+    nu = g.n_users
+    intra = np.sum(labels[g.edge_u] == labels[nu + g.edge_v])
+    intra_p = np.sum(labels[pruned.edge_u] == labels[nu + pruned.edge_v])
+    assert intra_p == intra
+
+
+def test_minhash_empty_neighborhoods_never_collide():
+    idx = cd.MinHashIndex(seed=1)
+    indptr = np.zeros(6, np.int64)          # 5 nodes, all degree 0
+    neigh = np.zeros(0, np.int64)
+    idx.fit(indptr, neigh)
+    flat, qptr = idx.query(indptr[:3], neigh)
+    assert flat.size == 0                   # no spurious bucket hits
+    assert np.all(np.diff(qptr) == 0)
+
+
+# ---------------------------------------------------------------------------
+# edge_partition compose mode
+# ---------------------------------------------------------------------------
+def test_edge_partition_bounds_mode():
+    g = planted(seed=6)
+    indptr = g.user_csr()[0]
+    bounds = node_aligned_bounds(indptr, -(-g.n_edges // 4))
+    node_l, opp, nps, node_starts = edge_partition(
+        g.edge_u, g.edge_v, g.n_users, bounds.size - 1, bounds=bounds)
+    n_shards = bounds.size - 1
+    emax = int(np.max(np.diff(bounds)))
+    assert node_starts[0] == 0
+    assert node_l.shape == (n_shards * emax,)
+    # reconstruct the global edge list from the padded per-shard blocks
+    for s in range(n_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        blk = slice(s * emax, s * emax + (hi - lo))
+        assert np.all(node_l[blk] < nps)        # real edges, not padding
+        assert np.array_equal(node_l[blk] + node_starts[s], g.edge_u[lo:hi])
+        assert np.array_equal(opp[blk], g.edge_v[lo:hi])
+        pad = node_l[s * emax + (hi - lo):(s + 1) * emax]
+        assert np.all(pad == nps)               # sentinel local id
+
+
+def test_edge_partition_bounds_must_be_node_aligned():
+    g = planted(seed=6)
+    deg = np.diff(g.user_csr()[0])
+    # cut inside the first node with degree >= 2
+    node = int(np.argmax(deg >= 2))
+    cut = int(g.user_csr()[0][node]) + 1
+    bad = np.array([0, cut, g.n_edges], np.int64)
+    with pytest.raises(ValueError):
+        edge_partition(g.edge_u, g.edge_v, g.n_users, 2, bounds=bad)
+
+
+# ---------------------------------------------------------------------------
+# stream wiring
+# ---------------------------------------------------------------------------
+def test_stream_assign_minhash_matches_exact():
+    from repro.stream.assign import ColdStartAssigner, grow_labels
+    g, wu, wv = setup(seed=7, nu=900, nv=300, k=16)
+    labels, _ = solver_jax.lp_solve(g, wu, wv, 0.7, max_iters=8)
+    n_cold = 25
+    nu = g.n_users
+    lab = np.asarray(labels, np.int32).copy()
+    lab[nu - n_cold:nu] = np.arange(nu - n_cold, nu, dtype=np.int32)
+    out_e, st_e = ColdStartAssigner(gamma=0.7).assign(g, lab, n_cold, 0)
+    out_m, st_m = ColdStartAssigner(
+        gamma=0.7,
+        engine=ClusterEngine(candidates="minhash")).assign(g, lab,
+                                                           n_cold, 0)
+    assert st_m.n_new_users == n_cold
+    agree = float(np.mean(out_m[nu - n_cold:nu] == out_e[nu - n_cold:nu]))
+    assert agree >= 0.95

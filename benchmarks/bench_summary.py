@@ -1,29 +1,50 @@
-"""Merge every BENCH_*.json perf record into one trajectory table.
+"""The repo's perf trajectory at a glance — store-backed.
 
-Each benchmark in this repo emits a machine-readable record
-(BENCH_serve.json, BENCH_server.json, BENCH_cluster.json,
-BENCH_train.json, BENCH_stream.json, BENCH_kernel.json, ...). CI uploads them side by
-side; this tool is the one place they are read together — the printed
-table is the repo's perf trajectory at a glance, and `--json` re-emits
-the merged record for downstream tooling.
+Every benchmark emits through the ``repro.results`` BenchRun API into
+the content-keyed, append-only results store (``results_store/`` by
+default; seeded from the historical BENCH_*.json files by
+``benchmarks/migrate_store.py``). This tool is the one place the store
+is read as a whole:
 
-    python benchmarks/bench_summary.py [--dir .] [--json]
+    python benchmarks/bench_summary.py --store results_store
+        trajectory table: one line per (bench, config, fingerprint)
+        group — newest record's metrics + how deep its history runs
 
-``--check --against BASE_DIR`` compares the headline metrics of the
-records under --dir against the committed BENCH_*.json trajectory in
-BASE_DIR and prints a WARNING for every metric that moved more than 20%
-(--threshold to tune) in its bad direction — latency / compile counts
-up, speedup / bandwidth / recall down. Warn-only by default (exit 0) so
-a noisy CPU runner can't hard-fail CI; ``--strict`` exits 1 on any
-warning.
+    python benchmarks/bench_summary.py --check --store results_store
+        the regression gate: each group's newest record vs the MEDIAN
+        of its last N stored records, every metric judged in the
+        direction it DECLARED at emission time. Warn-only by default;
+        --strict exits 1 on any warning (the CI gate). --threshold
+        tunes the relative-regression cutoff, --last-n the window.
+
+    python benchmarks/bench_summary.py --bless BENCH:CONFIG_HASH \
+        --reason "..." --store results_store
+        accept an intentional regression: appends a bless marker, so
+        the trajectory for that config restarts after it (append-only —
+        nothing is rewritten).
+
+The pre-store modes survive for loose BENCH_*.json directories:
+``--dir`` renders the legacy merge table, and ``--check --against
+BASE_DIR`` compares two directories with the legacy name-suffix
+direction heuristics (imported/legacy records are the only place that
+guessing is still allowed — new records declare directions).
 """
 from __future__ import annotations
 
-import argparse
 import glob
 import json
 import os
 import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+for _p in (os.path.join(_HERE, os.pardir, "src"),):
+    _p = os.path.abspath(_p)
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.results import (ResultsStore, check_store, default_store_root,
+                           dumps_record)
+from repro.results.legacy import legacy_direction, legacy_headline
 
 
 def _fmt(v) -> str:
@@ -32,115 +53,29 @@ def _fmt(v) -> str:
     return str(v)
 
 
-def _headline(name: str, rec: dict) -> list:
-    """(metric, value) pairs worth a trajectory line, per bench kind."""
-    kind = rec.get("bench", name)
-    if kind == "serve_session":
-        rows = [r for r in rec.get("records", []) if "p50_ms" in r]
-        if not rows:
-            return []
-        best = min(rows, key=lambda r: r["p50_ms"])
-        return [("best p50_ms", best["p50_ms"]),
-                ("backend", best.get("backend", "?")),
-                ("buckets", len(rec.get("buckets", []))),
-                ("max compiles", max(r.get("compiles", 0) for r in rows))]
-    if kind == "cluster_solve":
-        rows = [r for r in rec.get("records", []) if isinstance(r, dict)]
-        out = [("records", len(rows))]
-        sp = [r["speedup_vs_seed"] for r in rows
-              if isinstance(r.get("speedup_vs_seed"), (int, float))]
-        if sp:
-            out.append(("best speedup_vs_seed", max(sp)))
-        return out
-    if kind == "train_pipeline":
-        rows = [r for r in rec.get("records", []) if isinstance(r, dict)]
-        out = [("records", len(rows))]
-        sp = [r["speedup_vs_seed"] for r in rows
-              if isinstance(r.get("speedup_vs_seed"), (int, float))]
-        if sp:
-            out.append(("best speedup_vs_seed", max(sp)))
-        return out
-    if kind == "server":
-        keys = ("sustained_qps", "e2e_p50_ms", "e2e_p99_ms",
-                "queue_delay_p99_ms", "swap_pause_ms",
-                "compiles_under_load")
-        return [(k, rec[k]) for k in keys if k in rec]
-    if kind == "stream":
-        keys = ("cold_assign_first_ms", "cold_assign_warm_p50_ms",
-                "swap_p99_ms",
-                "refresh_steady_frac_of_full", "recall_frozen",
-                "recall_stream", "recall_full", "recall_gap_recovered",
-                "compiles")
-        return [(k, rec[k]) for k in keys if k in rec]
-    if kind == "cluster_scale":
-        rungs = [r for r in rec.get("rungs", []) if isinstance(r, dict)]
-        out = []
-        for r in rungs:
-            tag = r.get("rung", "?")
-            if isinstance(r.get("sweep_ms"), (int, float)):
-                out.append((f"{tag} sweep_ms", r["sweep_ms"]))
-            if isinstance(r.get("peak_device_bytes"), (int, float)):
-                out.append((f"{tag} peak_mb",
-                            round(r["peak_device_bytes"] / 1e6, 1)))
-            if isinstance(r.get("blocks_per_s"), (int, float)):
-                out.append((f"{tag} blocks_per_s", r["blocks_per_s"]))
-        recalls = [r["cold"]["minhash_recall"] for r in rungs
-                   if isinstance(r.get("cold"), dict)
-                   and isinstance(r["cold"].get("minhash_recall"),
-                                  (int, float))]
-        if recalls:
-            out.append(("min minhash_recall", min(recalls)))
-        bitwise = [r["bitwise_equal_inmem"] for r in rungs
-                   if "bitwise_equal_inmem" in r]
-        if bitwise:
-            out.append(("bitwise_parity", "ok" if all(bitwise) else "FAIL"))
-        return out
-    if kind == "kernel":
-        fused = [r for r in rec.get("fused", [])
-                 if isinstance(r, dict) and "us_per_call" in r]
-        out = [("fused records", len(fused))]
-        for variant, label in (("fused", "fused_gbps"),
-                               ("fused_int8", "int8_gbps")):
-            rows = [r["achieved_gbps"] for r in fused
-                    if r.get("variant") == variant
-                    and isinstance(r.get("achieved_gbps"), (int, float))]
-            if rows:
-                out.append((f"best {label}", max(rows)))
-        errors = [r for r in rec.get("codebook_lookup", [])
-                  if isinstance(r, dict) and "error" in r]
-        out.append(("lookup errors", len(errors)))
-        return out
-    # unknown bench kind: surface its scalar fields
-    return [(k, v) for k, v in rec.items()
-            if isinstance(v, (int, float, str)) and k != "bench"][:6]
-
-
-# metric-direction heuristics for --check: a metric whose name matches a
-# HIGHER token is good-when-up (speedups, bandwidth, recall); otherwise a
-# LOWER token marks it good-when-down (latencies, compile/error counts).
-# HIGHER is checked first so e.g. "speedup_vs_seed" never trips on "_s".
-_HIGHER = ("speedup", "gbps", "recall", "recovered", "records", "buckets",
-           "qps", "per_s")
-_LOWER = ("_ms", "_us", "us_per", "compiles", "_s", "frac_of_full", "err",
-          "errors", "_mb")
-
-
-def _direction(metric: str):
-    """'higher' / 'lower' if the metric has a known good direction,
-    else None (skipped by --check)."""
-    if any(t in metric for t in _HIGHER):
-        return "higher"
-    if any(t in metric for t in _LOWER):
-        return "lower"
-    return None
+# ---------------------------------------------------------------------------
+# legacy BENCH_*.json directory support (pre-store checkouts, and the
+# dir-vs-dir compare mode)
+# ---------------------------------------------------------------------------
+def summarize(directory: str = ".") -> dict:
+    merged = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        try:
+            with open(path) as f:
+                merged[name] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            merged[name] = {"error": str(e)}
+    return merged
 
 
 def check(directory: str, against: str, threshold: float = 0.20) -> list:
-    """Compare headline metrics under ``directory`` vs the baseline
-    records in ``against``. Returns warning strings for every numeric
-    metric that regressed more than ``threshold`` (relative) in its bad
-    direction; metrics without a known direction, non-numeric values,
-    and records missing on either side are skipped."""
+    """LEGACY dir-vs-dir compare: headline metrics of the records under
+    ``directory`` vs the baseline records in ``against``, directions
+    guessed from metric names (repro.results.legacy). Returns warning
+    strings; metrics without a guessable direction are skipped. Kept
+    for loose-file checkouts — the store gate (--check --store) is the
+    real thing."""
     cur = summarize(directory)
     base = summarize(against)
     warnings = []
@@ -148,10 +83,10 @@ def check(directory: str, against: str, threshold: float = 0.20) -> list:
         ref = base.get(name)
         if ref is None or "error" in rec or "error" in ref:
             continue
-        ref_metrics = dict(_headline(name, ref))
-        for metric, value in _headline(name, rec):
+        ref_metrics = dict(legacy_headline(name, ref))
+        for metric, value in legacy_headline(name, rec):
             bval = ref_metrics.get(metric)
-            direction = _direction(metric)
+            direction = legacy_direction(metric)
             if direction is None:
                 continue
             if not isinstance(value, (int, float)) or isinstance(value, bool):
@@ -171,54 +106,15 @@ def check(directory: str, against: str, threshold: float = 0.20) -> list:
             if bad:
                 warnings.append(
                     f"{name}: {metric} {_fmt(bval)} -> {_fmt(value)} "
-                    f"({rel:+.0%}, {direction}-is-better)")
+                    f"({rel:+.0%}, {direction}-is-better, "
+                    f"legacy name-heuristic direction)")
     return warnings
 
 
-def summarize(directory: str = ".") -> dict:
-    merged = {}
-    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
-        name = os.path.splitext(os.path.basename(path))[0]
-        try:
-            with open(path) as f:
-                merged[name] = json.load(f)
-        except (OSError, json.JSONDecodeError) as e:
-            merged[name] = {"error": str(e)}
-    return merged
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--dir", default=".",
-                    help="directory holding the BENCH_*.json records")
-    ap.add_argument("--json", action="store_true",
-                    help="emit the merged record instead of the table")
-    ap.add_argument("--check", action="store_true",
-                    help="warn when a headline metric regresses vs the "
-                         "baseline records (see --against)")
-    ap.add_argument("--against", default=None,
-                    help="baseline directory for --check (default: --dir, "
-                         "i.e. the committed records in the repo root)")
-    ap.add_argument("--threshold", type=float, default=0.20,
-                    help="relative regression threshold for --check")
-    ap.add_argument("--strict", action="store_true",
-                    help="exit 1 if --check produced any warning")
-    args = ap.parse_args(argv)
-    if args.check:
-        warnings = check(args.dir, args.against or args.dir,
-                         threshold=args.threshold)
-        for w in warnings:
-            print(f"WARNING: {w}")
-        if not warnings:
-            print(f"check ok: no headline metric regressed more than "
-                  f"{args.threshold:.0%}")
-        return 1 if (warnings and args.strict) else 0
-    merged = summarize(args.dir)
-    if args.json:
-        print(json.dumps(merged, indent=2))
-        return 0
+def legacy_table(directory: str) -> int:
+    merged = summarize(directory)
     if not merged:
-        print(f"no BENCH_*.json records under {args.dir!r}")
+        print(f"no BENCH_*.json records under {directory!r}")
         return 1
     width = max(len(n) for n in merged)
     print(f"{'record':<{width}}  platform  headline metrics")
@@ -228,9 +124,134 @@ def main(argv=None):
             print(f"{name:<{width}}  -         unreadable: {rec['error']}")
             continue
         platform = rec.get("platform", "-")
-        pairs = "  ".join(f"{k}={_fmt(v)}" for k, v in _headline(name, rec))
+        pairs = "  ".join(f"{k}={_fmt(v)}"
+                          for k, v in legacy_headline(name, rec))
         print(f"{name:<{width}}  {platform:<8}  {pairs}")
     return 0
+
+
+# ---------------------------------------------------------------------------
+# store-backed trajectory table + gate
+# ---------------------------------------------------------------------------
+def store_groups(store: ResultsStore) -> list:
+    """[(bench, config_hash, fingerprint_key, live_history)] in shard
+    order, newest-first inside each shard untouched (append order)."""
+    out = []
+    for bench in store.benches():
+        seen = []
+        for r in store.records(bench):
+            key = (r.get("config_hash"), r.get("fingerprint_key"))
+            if None in key or key in seen:
+                continue
+            seen.append(key)
+            out.append((bench, key[0], key[1],
+                        store.history(bench, key[0], key[1])))
+    return out
+
+
+def store_table(store: ResultsStore) -> int:
+    groups = store_groups(store)
+    if not groups:
+        print(f"no records in results store {store.root!r}")
+        return 1
+    print(f"results store: {store.root}  "
+          f"({len(store.benches())} benches, {len(groups)} trajectories)")
+    print("-" * 72)
+    for bench, chash, fkey, hist in groups:
+        if not hist:
+            print(f"{bench}[{chash[:8]}@{fkey}]  (blessed away, "
+                  f"no live records)")
+            continue
+        cand = hist[-1]
+        pairs = "  ".join(
+            f"{k}={_fmt(m.get('value'))}"
+            for k, m in (cand.get("metrics") or {}).items()
+            if isinstance(m, dict))
+        depth = f"n={len(hist)}"
+        when = cand.get("created_at", "?")
+        print(f"{bench}[{chash[:8]}@{fkey}]  {depth:<5} {when}")
+        if pairs:
+            print(f"    {pairs}")
+    return 0
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--dir", default=None,
+                    help="legacy mode: directory holding loose "
+                         "BENCH_*.json records")
+    ap.add_argument("--store", nargs="?", const="",
+                    default=None, metavar="DIR",
+                    help="results-store directory (flag alone uses "
+                         "$REPRO_RESULTS_STORE or ./results_store)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the merged view as JSON instead of the "
+                         "table")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: newest record per trajectory "
+                         "vs the median of its stored history (store "
+                         "mode), or dir-vs-dir legacy compare")
+    ap.add_argument("--against", default=None,
+                    help="legacy --check baseline directory")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative regression threshold for --check")
+    ap.add_argument("--last-n", type=int, default=5,
+                    help="history window for the trajectory median")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if --check produced any warning")
+    ap.add_argument("--bless", default=None, metavar="BENCH:CONFIG_HASH",
+                    help="append a bless marker accepting an intentional "
+                         "regression for that configuration")
+    ap.add_argument("--reason", default="",
+                    help="why the regression in --bless is acceptable")
+    args = ap.parse_args(argv)
+
+    use_store = args.store is not None or (args.dir is None
+                                           and args.against is None)
+    store = None
+    if use_store:
+        store = ResultsStore(args.store or default_store_root())
+
+    if args.bless:
+        if store is None:
+            ap.error("--bless needs the store (drop --dir/--against)")
+        if ":" not in args.bless:
+            ap.error("--bless expects BENCH:CONFIG_HASH")
+        bench, chash = args.bless.split(":", 1)
+        marker = store.bless(bench, chash, reason=args.reason)
+        print(f"blessed {bench}[{chash}] at {marker['created_at']}: "
+              f"trajectory restarts after this marker")
+        return 0
+
+    if args.check:
+        if store is not None:
+            warnings, notes = check_store(store,
+                                          threshold=args.threshold,
+                                          last_n=args.last_n)
+            for n in notes:
+                print(f"note: {n}")
+        else:
+            warnings = check(args.dir or ".", args.against or args.dir
+                             or ".", threshold=args.threshold)
+        for w in warnings:
+            print(f"WARNING: {w}")
+        if not warnings:
+            print(f"check ok: no metric regressed more than "
+                  f"{args.threshold:.0%} against its trajectory")
+        return 1 if (warnings and args.strict) else 0
+
+    if store is not None:
+        if args.json:
+            print(dumps_record(store.all_records()))
+            return 0
+        return store_table(store)
+    if args.json:
+        print(dumps_record(summarize(args.dir or ".")))
+        return 0
+    return legacy_table(args.dir or ".")
 
 
 if __name__ == "__main__":

@@ -24,12 +24,12 @@ CI runs the 10k + 100k rungs; the 1M rung is local/manual:
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
 import numpy as np
+
+from repro.results import BenchRun, higher, lower
 
 # (n_users, n_items, k_true); avg degree fixed across the ladder
 RUNGS = {
@@ -217,35 +217,67 @@ def run(fast: bool = True):
     return rows.emit()
 
 
+def ladder_metrics(rungs) -> dict:
+    """Declared-direction headline metrics over the ladder rungs."""
+    out = {}
+    recalls, bitwise = [], []
+    for r in rungs:
+        if not isinstance(r, dict):
+            continue
+        tag = r.get("rung", "?")
+        if isinstance(r.get("sweep_ms"), (int, float)):
+            out[f"{tag}_sweep_ms"] = lower(r["sweep_ms"])
+        if isinstance(r.get("peak_device_bytes"), (int, float)):
+            out[f"{tag}_peak_mb"] = lower(
+                round(r["peak_device_bytes"] / 1e6, 1))
+        if isinstance(r.get("blocks_per_s"), (int, float)):
+            out[f"{tag}_blocks_per_s"] = higher(r["blocks_per_s"])
+        if isinstance(r.get("cold"), dict) \
+                and isinstance(r["cold"].get("minhash_recall"),
+                               (int, float)):
+            recalls.append(r["cold"]["minhash_recall"])
+        if "bitwise_equal_inmem" in r:
+            bitwise.append(bool(r["bitwise_equal_inmem"]))
+    if recalls:
+        out["min_minhash_recall"] = higher(min(recalls))
+    if bitwise:
+        out["bitwise_parity_ok"] = higher(int(all(bitwise)))
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", action="store_true",
-                    help="emit the machine-readable scale record")
-    ap.add_argument("--out", default=None,
-                    help="also write the record here (BENCH_cluster.json)")
-    ap.add_argument("--rungs", default="10k,100k",
-                    help=f"comma list from {sorted(RUNGS)}")
-    ap.add_argument("--block-edges", type=int, default=1 << 20)
-    ap.add_argument("--inmem-max-edges", type=int, default=INMEM_MAX_EDGES,
-                    help="run the in-memory parity reference up to this "
-                         "many edges")
-    args = ap.parse_args(argv)
+    run_ = BenchRun("cluster_scale", description=__doc__)
+    run_.add_argument("--rungs", default="10k,100k",
+                      help=f"comma list from {sorted(RUNGS)}")
+    run_.add_argument("--block-edges", type=int, default=1 << 20)
+    run_.add_argument("--inmem-max-edges", type=int,
+                      default=INMEM_MAX_EDGES,
+                      help="run the in-memory parity reference up to "
+                           "this many edges")
+    args = run_.parse(argv)
     rungs = [r.strip() for r in args.rungs.split(",") if r.strip()]
     unknown = [r for r in rungs if r not in RUNGS]
     if unknown:
-        ap.error(f"unknown rungs {unknown}; choose from {sorted(RUNGS)}")
+        run_.parser.error(f"unknown rungs {unknown}; "
+                          f"choose from {sorted(RUNGS)}")
+    config = {"rungs": rungs, "gamma": GAMMA, "avg_deg": AVG_DEG,
+              "max_iters": MAX_ITERS,
+              "block_edges": int(args.block_edges),
+              "inmem_max_edges": int(args.inmem_max_edges),
+              "cold_frac": COLD_FRAC}
+    hit = run_.cached(config)
+    if hit is not None:
+        run_.replay(hit)
+        return 0
     import jax
+    with run_.profile("ladder"):
+        rung_recs = bench(rungs, args.block_edges, args.inmem_max_edges)
     record = {"bench": "cluster_scale",
               "platform": jax.default_backend(),
               "gamma": GAMMA, "avg_deg": AVG_DEG,
               "block_edges": int(args.block_edges),
-              "rungs": bench(rungs, args.block_edges, args.inmem_max_edges)}
-    text = json.dumps(record, indent=2)
-    if args.json:
-        print(text)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text + "\n")
+              "rungs": rung_recs}
+    run_.emit(config, ladder_metrics(rung_recs), record)
     return 0
 
 

@@ -1,4 +1,10 @@
-"""Shared benchmark helpers: datasets, train+eval, timing, CSV rows."""
+"""Shared benchmark helpers: datasets, train+eval, timing, CSV rows.
+
+Record emission lives in ``repro.results`` (the BenchRun API) — this
+module only carries the measurement helpers the table/figure modules
+share. ``Row.payload()`` renders an accumulator as the JSON-able rows
+``benchmarks.run`` stores per module.
+"""
 from __future__ import annotations
 
 import functools
@@ -84,6 +90,11 @@ class Row:
 
     def emit(self):
         return self.rows
+
+    def payload(self):
+        """JSON-able view of the accumulated rows (for the store)."""
+        return [{"name": n, "us_per_call": us, "derived": d}
+                for n, us, d in self.rows]
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

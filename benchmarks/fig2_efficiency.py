@@ -29,8 +29,6 @@ per-sweep host round-trip is the bottleneck).
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
@@ -38,6 +36,7 @@ import numpy as np
 
 from benchmarks.common import Row, get_dataset
 from repro.core import ClusterEngine, build_sketch, make_weights
+from repro.results import BenchRun, higher, lower
 
 # solve-time sweep sizes (n_users, n_items, k_true, avg_deg); the numpy
 # Alg.1 python sweep only runs on graphs below this node count
@@ -165,35 +164,54 @@ def run(fast: bool = True):
     return rows.emit()
 
 
+def solve_metrics(records) -> dict:
+    """Declared-direction headline metrics: grid-search speedup of the
+    batched device walk, plus the largest-graph solve time per solver."""
+    rows = [r for r in records if isinstance(r, dict)]
+    out = {"records": higher(len(rows))}
+    grid = [r for r in rows if r.get("kind") == "grid_search"
+            and isinstance(r.get("speedup_vs_hostloop"), (int, float))]
+    if grid:
+        out["best_grid_speedup_vs_hostloop"] = higher(
+            max(r["speedup_vs_hostloop"] for r in grid))
+    solves = [r for r in rows if r.get("kind") == "solve"
+              and isinstance(r.get("solve_s"), (int, float))]
+    if solves:
+        n_max = max(r["n_nodes"] for r in solves)
+        for r in solves:
+            if r["n_nodes"] == n_max:
+                out[f"{r['solver']}_solve_s"] = lower(r["solve_s"])
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", action="store_true",
-                    help="emit the machine-readable cluster perf record")
-    ap.add_argument("--out", default=None,
-                    help="also write the JSON record to this path "
-                         "(e.g. BENCH_cluster.json)")
-    ap.add_argument("--full", action="store_true",
-                    help="include the largest synthetic graph")
-    ap.add_argument("--sizes", default=None,
-                    help="override the solve-sweep ladder: comma list of "
-                         "NUxNVxKxDEG, e.g. 2000x1500x24x12,60000x24000x200x24")
-    args = ap.parse_args(argv)
+    bench_run = BenchRun("cluster_solve", description=__doc__)
+    bench_run.add_argument("--full", action="store_true",
+                           help="include the largest synthetic graph")
+    bench_run.add_argument("--sizes", default=None,
+                           help="override the solve-sweep ladder: comma "
+                                "list of NUxNVxKxDEG, e.g. "
+                                "2000x1500x24x12,60000x24000x200x24")
+    args = bench_run.parse(argv)
     sizes = parse_sizes(args.sizes) if args.sizes else None
-    if not (args.json or args.out):
+    if not (args.json or args.out or args.profile):
         run(fast=not args.full)
         return 0
+    config = {"fast": not args.full, "gamma": GAMMA,
+              "sizes": sizes or (SIZES_FAST if not args.full
+                                 else SIZES_FULL)}
+    hit = bench_run.cached(config)
+    if hit is not None:
+        bench_run.replay(hit)
+        return 0
     import jax
-    records = bench(fast=not args.full, sizes=sizes)
+    with bench_run.profile("solve_sweep"):
+        records = bench(fast=not args.full, sizes=sizes)
     record = {"bench": "cluster_solve",
               "platform": jax.default_backend(),
               "gamma": GAMMA,
               "records": records}
-    text = json.dumps(record, indent=2)
-    if args.json:
-        print(text)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text + "\n")
+    bench_run.emit(config, solve_metrics(records), record)
     return 0
 
 

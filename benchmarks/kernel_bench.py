@@ -11,8 +11,6 @@ the same flag to recalibrate).
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
@@ -22,6 +20,7 @@ import numpy as np
 
 from benchmarks.common import Row
 from repro.kernels import ops, ref
+from repro.results import BenchRun, higher, lower
 
 # paper-relevant codebook sweep: gowalla-1/4-budget-ish K, serving and
 # training batch sizes, H=1 (plain) and H=2 (SCU secondary user clusters)
@@ -222,28 +221,56 @@ def _timeit(fn):
     return out, time.time() - t0
 
 
+def sweep_metrics(lookup, fused) -> dict:
+    """Declared-direction headline metrics of the sweep record."""
+    frecs = [r for r in fused
+             if isinstance(r, dict) and "us_per_call" in r]
+    out = {"fused_records": higher(len(frecs)),
+           "lookup_errors": lower(len([r for r in lookup
+                                       if "error" in r]))}
+    for variant, label in (("fused", "best_fused_gbps"),
+                           ("fused_int8", "best_int8_gbps")):
+        vals = [r["achieved_gbps"] for r in frecs
+                if r.get("variant") == variant
+                and isinstance(r.get("achieved_gbps"), (int, float))]
+        if vals:
+            out[label] = higher(max(vals))
+    sp = [r["speedup_vs_dense_xla"] for r in frecs
+          if r.get("variant", "").startswith("fused")
+          and isinstance(r.get("speedup_vs_dense_xla"), (int, float))]
+    if sp:
+        out["best_speedup_vs_dense_xla"] = higher(max(sp))
+    us = [r["us_per_call"] for r in lookup if "us_per_call" in r]
+    if us:
+        out["best_lookup_us"] = lower(min(us))
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", action="store_true",
-                    help="sweep EmbeddingEngine backends over (B,K,d,H) "
-                         "codebook shapes and print a JSON perf record")
-    ap.add_argument("--out", default=None,
-                    help="also write the JSON record to this path")
-    ap.add_argument("--full", action="store_true",
-                    help="full (slow) shapes for the classic kernel bench")
-    args = ap.parse_args(argv)
-    if args.json:
-        record = {"bench": "kernel",
-                  "platform": jax.default_backend(),
-                  "codebook_lookup": bench_backends(),
-                  "fused": bench_fused()}
-        text = json.dumps(record, indent=2)
-        print(text)
-        if args.out:
-            with open(args.out, "w") as f:
-                f.write(text + "\n")
+    bench = BenchRun("kernel", description=__doc__)
+    bench.add_argument("--full", action="store_true",
+                       help="full (slow) shapes for the classic kernel "
+                            "bench")
+    args = bench.parse(argv)
+    if not (args.json or args.out or args.profile):
+        run(fast=not args.full)
         return 0
-    run(fast=not args.full)
+    config = {"mode": "sweep", "sweep_shapes": SWEEP_SHAPES,
+              "fused_shapes": FUSED_SHAPES, "cb_shape": FUSED_CB_SHAPE,
+              "repeats": 3}
+    hit = bench.cached(config)
+    if hit is not None:
+        bench.replay(hit)
+        return 0
+    with bench.profile("codebook_sweep"):
+        lookup = bench_backends()
+    with bench.profile("fused_sweep"):
+        fused = bench_fused()
+    record = {"bench": "kernel",
+              "platform": jax.default_backend(),
+              "codebook_lookup": lookup,
+              "fused": fused}
+    bench.emit(config, sweep_metrics(lookup, fused), record)
     return 0
 
 

@@ -29,12 +29,12 @@ swap pause / compiles-under-load against the committed trajectory.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 
 import jax
 import numpy as np
+
+from repro.results import BenchRun, higher, lower
 
 BUCKETS = (1, 8, 64)
 
@@ -124,39 +124,57 @@ def bench(dataset: str = "beauty_s", dim: int = 32, steps: int = 60,
     return record
 
 
+def server_metrics(record) -> dict:
+    """Declared-direction headline metrics of the open-loop record."""
+    out = {}
+    for key, make in (("sustained_qps", higher), ("e2e_p50_ms", lower),
+                      ("e2e_p99_ms", lower),
+                      ("queue_delay_p99_ms", lower),
+                      ("swap_pause_ms", lower),
+                      ("compiles_under_load", lower),
+                      ("shed", lower), ("failed", lower)):
+        v = record.get(key)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = make(v)
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", action="store_true",
-                    help="emit the machine-readable perf record")
-    ap.add_argument("--out", default=None,
-                    help="also write the JSON record to this path "
-                         "(e.g. BENCH_server.json)")
-    ap.add_argument("--dataset", default="beauty_s")
-    ap.add_argument("--dim", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=60)
-    ap.add_argument("--extra-steps", type=int, default=24)
-    ap.add_argument("--qps", type=float, default=120.0)
-    ap.add_argument("--duration", type=float, default=4.0)
-    ap.add_argument("--flush-ms", type=float, default=2.0)
-    ap.add_argument("--queue-size", type=int, default=256)
-    ap.add_argument("--cache", type=int, default=1024)
-    ap.add_argument("--deadline-ms", type=float, default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-    record = bench(dataset=args.dataset, dim=args.dim, steps=args.steps,
-                   extra_steps=args.extra_steps, qps=args.qps,
-                   duration=args.duration, flush_ms=args.flush_ms,
-                   queue_size=args.queue_size, cache_entries=args.cache,
-                   deadline_ms=args.deadline_ms, seed=args.seed)
-    text = json.dumps(record, indent=2)
-    if args.json:
-        print(text)
-    else:
+    run = BenchRun("server", description=__doc__)
+    run.add_argument("--dataset", default="beauty_s")
+    run.add_argument("--dim", type=int, default=32)
+    run.add_argument("--steps", type=int, default=60)
+    run.add_argument("--extra-steps", type=int, default=24)
+    run.add_argument("--qps", type=float, default=120.0)
+    run.add_argument("--duration", type=float, default=4.0)
+    run.add_argument("--flush-ms", type=float, default=2.0)
+    run.add_argument("--queue-size", type=int, default=256)
+    run.add_argument("--cache", type=int, default=1024)
+    run.add_argument("--deadline-ms", type=float, default=None)
+    run.add_argument("--seed", type=int, default=0)
+    args = run.parse(argv)
+    config = {"dataset": args.dataset, "dim": args.dim,
+              "steps": args.steps, "extra_steps": args.extra_steps,
+              "qps": args.qps, "duration_s": args.duration,
+              "flush_ms": args.flush_ms, "queue_size": args.queue_size,
+              "cache_entries": args.cache,
+              "deadline_ms": args.deadline_ms, "seed": args.seed,
+              "buckets": list(BUCKETS)}
+    hit = run.cached(config)
+    if hit is not None:
+        run.replay(hit)
+        return 0
+    with run.profile("open_loop"):
+        record = bench(dataset=args.dataset, dim=args.dim,
+                       steps=args.steps, extra_steps=args.extra_steps,
+                       qps=args.qps, duration=args.duration,
+                       flush_ms=args.flush_ms, queue_size=args.queue_size,
+                       cache_entries=args.cache,
+                       deadline_ms=args.deadline_ms, seed=args.seed)
+    if not args.json:
         for k, v in record.items():
             print(f"{k}: {v}")
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text + "\n")
+    run.emit(config, server_metrics(record), record)
     if record["compiles_under_load"]:
         print(f"WARNING: {record['compiles_under_load']} XLA compiles "
               f"under load (expected 0)", file=sys.stderr)

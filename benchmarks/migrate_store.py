@@ -1,0 +1,112 @@
+"""Seed the results store from the committed legacy BENCH_*.json files.
+
+One-shot (but idempotent) migration: every loose ``BENCH_*.json`` at
+the repo root becomes one imported record in ``results_store/`` —
+
+  * ``config_hash`` is derived from the record itself (the legacy files
+    never recorded their bench invocation, so the record content is the
+    best available configuration identity);
+  * the fingerprint is the ``"imported"`` sentinel (plus whatever
+    platform the record captured) — imported records NEVER satisfy the
+    skip-if-measured cache and only serve the gate as a flagged
+    fallback baseline when a config has no same-fingerprint history;
+  * metrics come from the legacy headline extraction with the retired
+    name-suffix direction heuristic, each tagged
+    ``direction_source: "heuristic"``.
+
+Re-running skips records whose (bench, config_hash) already sit in the
+store, so the migration can be re-applied after new legacy files land
+without duplicating history.
+
+    PYTHONPATH=src:. python benchmarks/migrate_store.py \
+        [--dir .] [--store results_store] [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+for _p in (os.path.join(_HERE, os.pardir, "src"),):
+    _p = os.path.abspath(_p)
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.results import (ResultsStore, config_hash, default_store_root,
+                           make_record)
+from repro.results.legacy import legacy_metrics
+
+# legacy filename -> the bench name its record declares (fallback when
+# the record itself lacks a "bench" field)
+_NAME_HINTS = {
+    "BENCH_cluster": "cluster_scale",
+    "BENCH_kernel": "kernel",
+    "BENCH_server": "server",
+    "BENCH_stream": "stream",
+    "BENCH_serve": "serve_session",
+    "BENCH_train": "train_pipeline",
+    "BENCH_cluster_solve": "cluster_solve",
+}
+
+
+def import_record(store: ResultsStore, path: str, dry_run: bool = False):
+    """-> ('imported'|'skipped'|'empty'|'unreadable', detail)."""
+    name = os.path.splitext(os.path.basename(path))[0]
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return "unreadable", f"{name}: {e}"
+    if not isinstance(rec, dict):
+        return "unreadable", f"{name}: expected a JSON object"
+    bench = rec.get("bench") or _NAME_HINTS.get(name, name)
+    metrics = legacy_metrics(name, rec)
+    if not metrics:
+        return "empty", f"{name}: no metrics with a guessable direction"
+    # the legacy record IS the config identity — same file content,
+    # same hash, which is what makes re-running a no-op
+    config = {"imported_from": os.path.basename(path), "legacy": rec}
+    chash = config_hash(bench, config)
+    if any(r.get("config_hash") == chash for r in store.records(bench)):
+        return "skipped", f"{name}: already in store as {bench}[{chash}]"
+    fp = {"imported": True, "platform": rec.get("platform")}
+    record = make_record(bench, config, metrics, payload=rec, fp=fp)
+    assert record["fingerprint_key"] == "imported"
+    if not dry_run:
+        store.append(record)
+    return "imported", (f"{name} -> {bench}[{chash}] "
+                        f"({len(metrics)} metrics)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the legacy BENCH_*.json files")
+    ap.add_argument("--store", default=None,
+                    help="results-store directory (default "
+                         "$REPRO_RESULTS_STORE or ./results_store)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="report what would be imported, write nothing")
+    args = ap.parse_args(argv)
+    store = ResultsStore(args.store or default_store_root())
+    paths = sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+    if not paths:
+        print(f"no BENCH_*.json under {args.dir!r}; nothing to migrate")
+        return 0
+    counts = {}
+    for path in paths:
+        status, detail = import_record(store, path, dry_run=args.dry_run)
+        counts[status] = counts.get(status, 0) + 1
+        print(f"[{status}] {detail}")
+    print(f"migration: " + ", ".join(f"{v} {k}"
+                                     for k, v in sorted(counts.items()))
+          + (f" (dry run, store untouched)" if args.dry_run
+             else f" -> {store.root}"))
+    return 1 if counts.get("unreadable") else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,6 @@ os.environ.setdefault("XLA_FLAGS",
 
 import argparse
 import dataclasses
-import json
 import sys
 
 
@@ -135,9 +134,10 @@ def main(argv=None):
         if args.cell and name != args.cell:
             continue
         results.extend(r for r in fn() if r)
-    with open(args.out, "w") as f:
-        json.dump([{k: v for k, v in r.items() if k != "traceback"}
-                   for r in results], f, indent=1, default=str)
+    from repro.results import write_record
+    write_record(args.out,
+                 [{k: v for k, v in r.items() if k != "traceback"}
+                  for r in results])
     print(f"\nwrote {args.out}")
     return 0
 

@@ -13,6 +13,7 @@ Usage:
   python -m benchmarks.roofline --results dryrun_single_pod.json
   python -m benchmarks.roofline --cell gemma2-9b:train_4k   (live lower)
   python -m benchmarks.roofline --serving BENCH_kernel.json
+  python -m benchmarks.roofline --serving store   (latest store record)
 
 ``--serving`` places the fused serving-scorer sweep (written by
 ``kernel_bench.py --json``) against the HBM roofline: the fused kernel
@@ -20,11 +21,13 @@ is pure memory traffic at serving arithmetic intensities, so its bound
 is simply bytes_moved / HBM_BW, and the %roof column is the fraction of
 peak HBM bandwidth actually achieved. Only meaningful when the record
 was produced on a TPU — off-TPU records (Pallas interpret mode) get a
-caveat instead of a verdict.
+caveat instead of a verdict. Passing the literal ``store`` instead of a
+path reads the newest "kernel" record out of the results store, and
+``--json``/``--out`` emit the derived table as a "roofline_serving"
+record through the same store API every bench uses.
 """
 from __future__ import annotations
 
-import argparse
 import json
 import math
 import sys
@@ -249,19 +252,66 @@ def print_serving_table(record: dict, peak_bw: float = HBM_BW):
     return rows
 
 
+def _load_serving_source(spec: str, store):
+    """The kernel sweep record + an identity dict for the derived
+    record's config. ``spec`` is a BENCH_kernel.json path, or the
+    literal "store" for the newest kernel record in the store."""
+    if spec != "store":
+        with open(spec) as f:
+            return json.load(f), {"source": spec}
+    if store is None:
+        raise SystemExit("--serving store needs a store (drop --no-store)")
+    recs = store.records("kernel")
+    if not recs:
+        raise SystemExit(f"no 'kernel' records under {store.root!r}; "
+                         f"run kernel_bench.py --json first")
+    rec = recs[-1]
+    return rec.get("payload", {}), {
+        "source": "store",
+        "kernel_config_hash": rec.get("config_hash"),
+        "kernel_created_at": rec.get("created_at"),
+        "kernel_fingerprint_key": rec.get("fingerprint_key"),
+    }
+
+
+def serving_metrics(rows) -> dict:
+    """Declared-direction headline metrics of the serving roofline."""
+    from repro.results import higher, lower
+    timed = [r for r in rows if "us_per_call" in r]
+    out = {"roofline_rows": higher(len(timed))}
+    fracs = [r["hbm_frac"] for r in timed
+             if isinstance(r.get("hbm_frac"), (int, float))]
+    if fracs:
+        out["best_hbm_frac"] = higher(max(fracs))
+    gbps = [r["achieved_gbps"] for r in timed
+            if isinstance(r.get("achieved_gbps"), (int, float))]
+    if gbps:
+        out["best_achieved_gbps"] = higher(max(gbps))
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--results", default="dryrun_single_pod.json")
-    ap.add_argument("--cell", default=None, help="arch:shape (live lower)")
-    ap.add_argument("--serving", default=None, metavar="BENCH_KERNEL_JSON",
-                    help="render the fused serving sweep of a "
-                         "BENCH_kernel.json record against the HBM "
-                         "roofline")
-    args = ap.parse_args(argv)
+    from repro.results import BenchRun
+    run = BenchRun("roofline_serving", description=__doc__)
+    run.add_argument("--results", default="dryrun_single_pod.json")
+    run.add_argument("--cell", default=None,
+                     help="arch:shape (live lower)")
+    run.add_argument("--serving", default=None,
+                     metavar="BENCH_KERNEL_JSON|store",
+                     help="render the fused serving sweep of a "
+                          "BENCH_kernel.json record (or the newest "
+                          "store 'kernel' record) against the HBM "
+                          "roofline")
+    args = run.parse(argv)
     if args.serving:
-        with open(args.serving) as f:
-            record = json.load(f)
-        print_serving_table(record)
+        record, source = _load_serving_source(args.serving, run.store)
+        rows = print_serving_table(record)
+        if args.json or args.out:
+            config = {**source, "peak_bw": HBM_BW}
+            payload = {"bench": "roofline_serving",
+                       "platform": record.get("platform", "?"),
+                       "peak_bw": HBM_BW, "rows": rows}
+            run.emit(config, serving_metrics(rows), payload)
         return 0
     if args.cell:
         import os

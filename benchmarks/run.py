@@ -1,19 +1,26 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast | --full] [--only NAME]
+  PYTHONPATH=src:. python -m benchmarks.run [--fast | --full] [--only NAME]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
 Fast mode (the default, spellable explicitly as --fast) uses the
 small-scale synthetic datasets; --full runs the paper-scale ones
 (slower, same orderings — table11 then exercises the 1M-node ladder
 rung through the streamed solver).
+
+Every module's run is recorded in the results store keyed by
+{module, mode}: re-invoking with an unchanged config on the same
+environment reports ``cached`` and runs nothing (--force re-measures,
+--no-store opts out entirely). ``--profile`` wraps each module in a
+jax.profiler trace capture.
 """
 from __future__ import annotations
 
-import argparse
 import importlib
 import sys
 import time
+
+from repro.results import BenchRun, higher, lower
 
 MODULES = [
     "kernel_bench",
@@ -30,30 +37,51 @@ MODULES = [
 ]
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    speed = ap.add_mutually_exclusive_group()
+def main(argv=None, modules=None):
+    suite = BenchRun("suite", description=__doc__)
+    speed = suite.parser.add_mutually_exclusive_group()
     speed.add_argument("--fast", action="store_true",
                        help="small synthetic datasets (the default)")
     speed.add_argument("--full", action="store_true",
                        help="paper-scale datasets, incl. the 1M rung")
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args(argv)
+    suite.add_argument("--only", default=None)
+    args = suite.parse(argv)
+    modules = MODULES if modules is None else modules
+    mode = "full" if args.full else "fast"
     print("name,us_per_call,derived")
     t_all = time.time()
     failures = []
-    for name in MODULES:
+    n_cached = 0
+    for name in modules:
         if args.only and args.only not in name:
+            continue
+        config = {"module": name, "mode": mode}
+        hit = suite.cached(config)
+        if hit is not None:
+            print(f"# {name} cached (config {hit['config_hash']}, "
+                  f"measured {hit.get('created_at', '?')}; --force "
+                  f"re-runs)", flush=True)
+            n_cached += 1
             continue
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.run(fast=not args.full)
-            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            with suite.profile(name):
+                rows = mod.run(fast=not args.full)
+            dt = time.time() - t0
+            payload_rows = [{"name": n, "us_per_call": us, "derived": d}
+                            for n, us, d in (rows or [])]
+            suite.emit(config,
+                       {"wall_s": lower(dt),
+                        "rows": higher(len(payload_rows))},
+                       payload={"bench": "suite", "module": name,
+                                "mode": mode, "rows": payload_rows})
+            print(f"# {name} done in {dt:.1f}s", flush=True)
         except Exception as e:  # keep the suite running
             failures.append((name, repr(e)))
             print(f"# {name} FAILED: {e!r}", flush=True)
-    print(f"# total {time.time()-t_all:.1f}s, {len(failures)} failures")
+    print(f"# total {time.time()-t_all:.1f}s, {len(failures)} failures, "
+          f"{n_cached} cached")
     return 1 if failures else 0
 
 

@@ -15,13 +15,13 @@ emits the machine-readable record:
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
 import jax
 import numpy as np
+
+from repro.results import BenchRun, higher, lower
 
 BUCKETS = (1, 8, 64)
 
@@ -74,34 +74,48 @@ def bench(dataset: str = "beauty_s", dim: int = 32, steps: int = 40,
     return records
 
 
+def session_metrics(records) -> dict:
+    """Declared-direction headline metrics over the per-bucket rows."""
+    rows = [r for r in records if "p50_ms" in r]
+    out = {"serve_errors": lower(len([r for r in records
+                                      if "error" in r]))}
+    if rows:
+        out["best_p50_ms"] = lower(min(r["p50_ms"] for r in rows))
+        out["best_p99_ms"] = lower(min(r["p99_ms"] for r in rows))
+        out["max_compiles"] = lower(max(r.get("compiles", 0)
+                                        for r in rows))
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", action="store_true",
-                    help="emit the machine-readable perf record")
-    ap.add_argument("--out", default=None,
-                    help="also write the JSON record to this path "
-                         "(e.g. BENCH_serve.json)")
-    ap.add_argument("--dataset", default="beauty_s")
-    ap.add_argument("--dim", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=40)
-    ap.add_argument("--n-requests", type=int, default=20)
-    args = ap.parse_args(argv)
-    records = bench(dataset=args.dataset, dim=args.dim, steps=args.steps,
-                    n_requests=args.n_requests)
+    run = BenchRun("serve_session", description=__doc__)
+    run.add_argument("--dataset", default="beauty_s")
+    run.add_argument("--dim", type=int, default=32)
+    run.add_argument("--steps", type=int, default=40)
+    run.add_argument("--n-requests", type=int, default=20)
+    args = run.parse(argv)
+    config = {"dataset": args.dataset, "dim": args.dim,
+              "steps": args.steps, "n_requests": args.n_requests,
+              "buckets": list(BUCKETS)}
+    hit = run.cached(config)
+    if hit is not None:
+        run.replay(hit)
+        if not args.json:
+            for r in hit.get("payload", {}).get("records", []):
+                print(r)
+        return 0
+    with run.profile("serve_sweep"):
+        records = bench(dataset=args.dataset, dim=args.dim,
+                        steps=args.steps, n_requests=args.n_requests)
     record = {"bench": "serve_session",
               "platform": jax.default_backend(),
               "buckets": list(BUCKETS),
               "dataset": args.dataset, "dim": args.dim,
               "records": records}
-    text = json.dumps(record, indent=2)
-    if args.json:
-        print(text)
-    else:
+    if not args.json:
         for r in records:
             print(r)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text + "\n")
+    run.emit(config, session_metrics(records), record)
     return 0
 
 

@@ -23,12 +23,12 @@ and records the quantities the subsystem exists to optimize:
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
 import numpy as np
+
+from repro.results import BenchRun, higher, lower
 
 
 def _split_steps(steps, holdout: float, seed: int):
@@ -230,42 +230,68 @@ def bench(n_users=1800, n_items=1440, k_true=24, avg_deg=12, T=4, dim=32,
     return record
 
 
+def stream_metrics(record) -> dict:
+    """Declared-direction headline metrics of the stream record."""
+    out = {}
+    for key, make in (("cold_assign_first_ms", lower),
+                      ("cold_assign_warm_p50_ms", lower),
+                      ("swap_p99_ms", lower),
+                      ("refresh_steady_frac_of_full", lower),
+                      ("maintenance_frac_of_full", lower),
+                      ("recall_frozen", higher),
+                      ("recall_stream", higher),
+                      ("recall_full", higher),
+                      ("recall_gap_recovered", higher),
+                      ("compiles", lower),
+                      ("capacity_bumps", lower)):
+        v = record.get(key)
+        if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                and v == v:                    # NaN never gates
+            out[key] = make(v)
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", action="store_true")
-    ap.add_argument("--out", default=None,
-                    help="write the JSON record here (BENCH_stream.json)")
-    ap.add_argument("--n-users", type=int, default=1800)
-    ap.add_argument("--n-items", type=int, default=1440)
-    ap.add_argument("--k-true", type=int, default=24)
-    ap.add_argument("--steps", dest="T", type=int, default=4)
-    ap.add_argument("--dim", type=int, default=32)
-    ap.add_argument("--base-steps", type=int, default=300)
-    ap.add_argument("--full-steps", type=int, default=400)
-    ap.add_argument("--tune-steps", type=int, default=60)
-    ap.add_argument("--refresh-every", type=int, default=2)
-    ap.add_argument("--drift", type=float, default=0.05,
-                    help="membership drift per stream step (the regime "
-                         "warm refresh targets; heavy drift is a rebuild)")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    run = BenchRun("stream", description=__doc__)
+    run.add_argument("--n-users", type=int, default=1800)
+    run.add_argument("--n-items", type=int, default=1440)
+    run.add_argument("--k-true", type=int, default=24)
+    run.add_argument("--steps", dest="T", type=int, default=4)
+    run.add_argument("--dim", type=int, default=32)
+    run.add_argument("--base-steps", type=int, default=300)
+    run.add_argument("--full-steps", type=int, default=400)
+    run.add_argument("--tune-steps", type=int, default=60)
+    run.add_argument("--refresh-every", type=int, default=2)
+    run.add_argument("--drift", type=float, default=0.05,
+                     help="membership drift per stream step (the regime "
+                          "warm refresh targets; heavy drift is a "
+                          "rebuild)")
+    run.add_argument("--seed", type=int, default=0)
+    args = run.parse(argv)
+    config = {"n_users": args.n_users, "n_items": args.n_items,
+              "k_true": args.k_true, "T": args.T, "dim": args.dim,
+              "base_steps": args.base_steps,
+              "full_steps": args.full_steps,
+              "tune_steps": args.tune_steps,
+              "refresh_every": args.refresh_every, "drift": args.drift,
+              "seed": args.seed}
+    hit = run.cached(config)
+    if hit is not None:
+        run.replay(hit)
+        return 0
     import jax
-    record = {"bench": "stream",
-              "platform": jax.default_backend(),
-              **bench(n_users=args.n_users, n_items=args.n_items,
-                      k_true=args.k_true, T=args.T, dim=args.dim,
-                      base_steps=args.base_steps,
-                      full_steps=args.full_steps,
-                      tune_steps=args.tune_steps,
-                      refresh_every=args.refresh_every, drift=args.drift,
-                      seed=args.seed,
-                      log=(lambda *_: None) if args.json else print)}
-    text = json.dumps(record, indent=2)
-    if args.json:
-        print(text)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text + "\n")
+    with run.profile("replay"):
+        record = {"bench": "stream",
+                  "platform": jax.default_backend(),
+                  **bench(n_users=args.n_users, n_items=args.n_items,
+                          k_true=args.k_true, T=args.T, dim=args.dim,
+                          base_steps=args.base_steps,
+                          full_steps=args.full_steps,
+                          tune_steps=args.tune_steps,
+                          refresh_every=args.refresh_every,
+                          drift=args.drift, seed=args.seed,
+                          log=(lambda *_: None) if args.json else print)}
+    run.emit(config, stream_metrics(record), record)
     return 0
 
 

@@ -22,13 +22,13 @@ emits the machine-readable record:
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
 import jax
 import numpy as np
+
+from repro.results import BenchRun, higher, lower
 
 CHUNKS = (1, 8, 32)
 
@@ -97,38 +97,56 @@ def bench(dataset: str = "synth_xs", dim: int = 16, batch: int = 1024,
     return records
 
 
+def pipeline_metrics(records) -> dict:
+    """Declared-direction headline metrics over the backend rows."""
+    rows = [r for r in records if isinstance(r, dict)]
+    out = {"records": higher(len(rows)),
+           "train_errors": lower(len([r for r in rows if "error" in r]))}
+    sp = [r["speedup_vs_seed"] for r in rows
+          if isinstance(r.get("speedup_vs_seed"), (int, float))]
+    if sp:
+        out["best_speedup_vs_seed"] = higher(max(sp))
+    sps = [r["steps_per_s"] for r in rows
+           if isinstance(r.get("steps_per_s"), (int, float))]
+    if sps:
+        out["best_steps_per_s"] = higher(max(sps))
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", action="store_true",
-                    help="emit the machine-readable perf record")
-    ap.add_argument("--out", default=None,
-                    help="also write the JSON record to this path "
-                         "(e.g. BENCH_train.json)")
-    ap.add_argument("--dataset", default="synth_xs")
-    ap.add_argument("--dim", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=1024)
-    ap.add_argument("--steps", type=int, default=32,
-                    help="steps per timed round")
-    ap.add_argument("--rounds", type=int, default=5,
-                    help="interleaved timed rounds per backend (median)")
-    args = ap.parse_args(argv)
-    records = bench(dataset=args.dataset, dim=args.dim, batch=args.batch,
-                    steps=args.steps, rounds=args.rounds)
+    run = BenchRun("train_pipeline", description=__doc__)
+    run.add_argument("--dataset", default="synth_xs")
+    run.add_argument("--dim", type=int, default=16)
+    run.add_argument("--batch", type=int, default=1024)
+    run.add_argument("--steps", type=int, default=32,
+                     help="steps per timed round")
+    run.add_argument("--rounds", type=int, default=5,
+                     help="interleaved timed rounds per backend (median)")
+    args = run.parse(argv)
+    config = {"dataset": args.dataset, "dim": args.dim,
+              "batch": args.batch, "steps": args.steps,
+              "rounds": args.rounds, "chunks": list(CHUNKS)}
+    hit = run.cached(config)
+    if hit is not None:
+        run.replay(hit)
+        if not args.json:
+            for r in hit.get("payload", {}).get("records", []):
+                print(r)
+        return 0
+    with run.profile("trainer_sweep"):
+        records = bench(dataset=args.dataset, dim=args.dim,
+                        batch=args.batch, steps=args.steps,
+                        rounds=args.rounds)
     record = {"bench": "train_pipeline",
               "platform": jax.default_backend(),
               "n_devices": jax.device_count(),
               "dataset": args.dataset, "dim": args.dim,
               "batch": args.batch, "steps": args.steps,
               "records": records}
-    text = json.dumps(record, indent=2)
-    if args.json:
-        print(text)
-    else:
+    if not args.json:
         for r in records:
             print(r)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text + "\n")
+    run.emit(config, pipeline_metrics(records), record)
     return 0
 
 

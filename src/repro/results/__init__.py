@@ -1,0 +1,64 @@
+"""repro.results — content-keyed, append-only results store + gate.
+
+Why this exists
+---------------
+Every scale push (PR 6 kernel roofline, PR 7 load bench, PR 8 1M-node
+ladder) used to land its numbers as a loose ``BENCH_*.json`` that the
+next run overwrote, and CI compared against a hand-copied baseline
+directory with name-suffix direction guessing. This package makes the
+*trajectory* the artifact: every measurement appends to a content-keyed
+store, and the gate compares each new record against the history of the
+same configuration on the same environment.
+
+The pieces
+----------
+``record``   Record schema. ``config_hash(bench, config)`` content-keys
+             a configuration (dict-key-order stable); ``fingerprint()``
+             captures platform / device kind / device count / jax
+             version; ``higher(v)`` / ``lower(v)`` declare a metric's
+             good direction AT EMISSION TIME.
+``store``    :class:`ResultsStore` — sharded JSONL
+             (``results_store/<bench>.jsonl``), append-only (the only
+             mutation anywhere is ``open(..., "a")``); ``bless()``
+             appends a marker accepting an intentional regression.
+``gate``     ``check_store()`` — newest record per (bench, config_hash,
+             fingerprint) group vs the median of the last N earlier
+             records, judged per declared direction; imported legacy
+             records are a flagged fallback baseline.
+``runner``   :class:`BenchRun` — the one API benchmarks emit through:
+             owns ``--json/--out/--store/--profile/--force`` arg
+             parsing, the store append, the legacy ``BENCH_*.json``
+             mirror, skip-if-already-measured, and ``jax.profiler``
+             trace capture.
+``legacy``   Headline extraction + the retired name-suffix direction
+             heuristic, used only for records imported from pre-store
+             BENCH files (``benchmarks/migrate_store.py``).
+
+Layout of a store record (one JSONL line)::
+
+    {"schema": 1, "bench": "kernel",
+     "config": {...every code-relevant knob...},
+     "config_hash": "0f3a...",                 # sha256 of {bench,config}
+     "fingerprint": {"platform": "cpu", "device_kind": "cpu",
+                     "device_count": 1, "jax_version": "0.4.37", ...},
+     "fingerprint_key": "cpu:cpu:1:jax0.4.37", # trajectory isolation
+     "created_at": "...", "metrics":
+        {"best_fused_gbps": {"value": 3.1, "higher_is_better": true}},
+     "payload": {...the full legacy-format record...}}
+
+See EXPERIMENTS.md "Results store & regression gate" for the operator
+guide (trajectory rule, blessing an intentional regression, profiling).
+"""
+from .gate import check_store, compare_metrics
+from .record import (SCHEMA_VERSION, canonical_json, config_hash,
+                     dumps_record, fingerprint, fingerprint_key, higher,
+                     lower, make_record, write_record)
+from .runner import BenchRun, default_store_root
+from .store import ResultsStore
+
+__all__ = [
+    "SCHEMA_VERSION", "canonical_json", "config_hash", "dumps_record",
+    "fingerprint", "fingerprint_key", "higher", "lower", "make_record",
+    "write_record", "ResultsStore", "BenchRun", "default_store_root",
+    "check_store", "compare_metrics",
+]

@@ -1,0 +1,161 @@
+"""Record schema for the results store.
+
+A record is one measurement of one benchmark configuration on one
+machine. Three pieces of identity key it:
+
+  * ``bench``        — the benchmark's registered kind ("kernel",
+                       "server", "cluster_scale", ...);
+  * ``config_hash``  — sha256 (truncated) of the canonical JSON of
+                       {bench, config}, where ``config`` holds every
+                       code-relevant knob the bench was invoked with
+                       (shapes, step counts, datasets, solver names).
+                       Dict key order never changes the hash; list
+                       order does (a shape sweep IS ordered);
+  * ``fingerprint``  — the environment the number was measured on:
+                       platform, device kind/count, jax version.
+                       Records from different fingerprints never share
+                       a trajectory (a TPU regression cannot be masked
+                       by a fast CPU baseline, and vice versa).
+
+Metrics are declared with an explicit direction at emission time via
+:func:`higher` / :func:`lower` — the gate never guesses from the
+metric's name (that heuristic survives only for records imported from
+the pre-store BENCH_*.json files, see ``repro.results.legacy``).
+"""
+from __future__ import annotations
+
+import datetime
+import hashlib
+import json
+import platform as _platform
+
+SCHEMA_VERSION = 1
+
+__all__ = ["SCHEMA_VERSION", "canonical_json", "config_hash",
+           "fingerprint", "fingerprint_key", "higher", "lower",
+           "make_record", "dumps_record", "write_record"]
+
+
+def _normalize(obj):
+    """JSON-able copy with deterministic scalar types: tuples become
+    lists, numpy scalars become python scalars, dict keys become str.
+    Raises TypeError for anything that cannot round-trip through JSON.
+    """
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
+        return obj
+    if isinstance(obj, dict):
+        return {str(k): _normalize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_normalize(v) for v in obj]
+    # numpy scalars (and anything else exposing .item()) without
+    # importing numpy here
+    item = getattr(obj, "item", None)
+    if callable(item):
+        return _normalize(item())
+    raise TypeError(f"not JSON-able for a results record: {type(obj)!r}")
+
+
+def canonical_json(obj) -> str:
+    """Deterministic JSON: sorted keys, no whitespace, normalized
+    scalar types — the byte string config hashes are computed over."""
+    return json.dumps(_normalize(obj), sort_keys=True,
+                      separators=(",", ":"))
+
+
+def config_hash(bench: str, config: dict) -> str:
+    """Content key of a benchmark configuration. Stable under dict key
+    order; sensitive to every value (and to list order)."""
+    text = canonical_json({"bench": bench, "config": config})
+    return hashlib.sha256(text.encode("utf-8")).hexdigest()[:16]
+
+
+def fingerprint() -> dict:
+    """Environment fingerprint of THIS process: platform, device
+    kind/count, jax version. jax is imported lazily so store reads
+    (bench_summary, migration) never pay jax startup."""
+    import jax
+    dev = jax.devices()[0]
+    return {
+        "platform": jax.default_backend(),
+        "device_kind": str(getattr(dev, "device_kind", "?")),
+        "device_count": int(jax.device_count()),
+        "jax_version": jax.__version__,
+        "python_version": _platform.python_version(),
+        "machine": _platform.machine(),
+    }
+
+
+def fingerprint_key(fp: dict) -> str:
+    """The trajectory-isolation key. Two records share a trajectory
+    only when their keys match: platform + device kind + device count +
+    jax version. Imported legacy records (``fp["imported"]`` truthy)
+    all collapse to the sentinel key "imported" — they are a seed
+    baseline of last resort, not a real trajectory."""
+    if fp.get("imported"):
+        return "imported"
+    return (f"{fp.get('platform', '?')}:{fp.get('device_kind', '?')}"
+            f":{fp.get('device_count', '?')}"
+            f":jax{fp.get('jax_version', '?')}")
+
+
+def higher(value, **extra) -> dict:
+    """Declare a metric whose larger values are better (speedups,
+    bandwidth, recall, QPS)."""
+    return {"value": value, "higher_is_better": True, **extra}
+
+
+def lower(value, **extra) -> dict:
+    """Declare a metric whose smaller values are better (latencies,
+    wall times, compile/error counts, bytes)."""
+    return {"value": value, "higher_is_better": False, **extra}
+
+
+def make_record(bench: str, config: dict, metrics: dict,
+                payload=None, fp: dict | None = None,
+                extra: dict | None = None) -> dict:
+    """Assemble one store record. ``metrics`` maps name -> the dict
+    produced by :func:`higher` / :func:`lower`; every entry must carry
+    an explicit ``higher_is_better`` — this is where name-suffix
+    guessing goes to die."""
+    for name, m in metrics.items():
+        if not isinstance(m, dict) or "higher_is_better" not in m \
+                or "value" not in m:
+            raise ValueError(
+                f"metric {name!r} must declare its direction at emission "
+                f"time — use repro.results.higher(v) / lower(v), got {m!r}")
+    fp = dict(fp) if fp is not None else fingerprint()
+    rec = {
+        "schema": SCHEMA_VERSION,
+        "bench": bench,
+        "config": _normalize(config),
+        "config_hash": config_hash(bench, config),
+        "fingerprint": fp,
+        "fingerprint_key": fingerprint_key(fp),
+        "created_at": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "metrics": {str(k): _normalize(v) for k, v in metrics.items()},
+    }
+    if payload is not None:
+        rec["payload"] = _normalize(payload)
+    if extra:
+        rec.update(_normalize(extra))
+    return rec
+
+
+def dumps_record(obj, indent: int = 2) -> str:
+    """The one sanctioned JSON serializer for bench records — the grep
+    test in tests/test_results_store.py forbids raw json.dump(s) under
+    benchmarks/ so every record flows through the store layer.
+    Strictness lives in :func:`make_record` (which normalizes or
+    raises); here stray objects degrade to ``str`` so diagnostic
+    payloads never kill a bench at write time."""
+    return json.dumps(obj, indent=indent, default=str)
+
+
+def write_record(path: str, obj) -> None:
+    """Write a record (or any JSON-able object) to ``path`` — the
+    legacy BENCH_*.json mirror writer."""
+    with open(path, "w") as f:
+        f.write(dumps_record(obj) + "\n")

@@ -1,0 +1,185 @@
+"""BenchRun: the one entry-point API every benchmark emits through.
+
+A benchmark's ``main`` builds a :class:`BenchRun`, registers its own
+arguments on ``run.parser``, and then:
+
+    run = BenchRun("kernel", description=__doc__)
+    run.add_argument("--full", action="store_true")
+    args = run.parse(argv)
+    config = {"full": args.full, "shapes": SWEEP_SHAPES}
+    hit = run.cached(config)
+    if hit is not None:                 # skip-if-already-measured
+        run.replay(hit)
+        return 0
+    with run.profile("sweep"):          # no-op unless --profile
+        records = measure(...)
+    run.emit(config,
+             metrics={"best_gbps": higher(...), "p50_ms": lower(...)},
+             payload=legacy_record)
+    return 0
+
+BenchRun owns the shared flags (``--json --out --store --no-store
+--force --profile --profile-dir``) and the three write paths:
+
+  * the append to the content-keyed results store (the system of
+    record — trajectory, gate, skip-if-measured all read this);
+  * the legacy ``BENCH_*.json`` mirror via ``--out`` (kept verbatim so
+    every pre-store reader keeps working);
+  * the ``--json`` stdout echo of the legacy payload.
+
+``--profile`` wraps any section passed through :meth:`profile` in a
+``jax.profiler`` trace capture to a per-run directory; the directories
+are recorded on the emitted record.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import os
+import sys
+
+from .record import (config_hash, dumps_record, fingerprint,
+                     fingerprint_key, make_record, write_record)
+from .store import ResultsStore
+
+__all__ = ["BenchRun", "default_store_root"]
+
+
+def default_store_root() -> str:
+    """$REPRO_RESULTS_STORE, else ./results_store (the committed store
+    at the repo root when benches run from there, as CI does)."""
+    return os.environ.get("REPRO_RESULTS_STORE") or "results_store"
+
+
+class BenchRun:
+    """Arg parsing + store write + legacy mirror + profiler capture +
+    incremental skip for one benchmark invocation."""
+
+    def __init__(self, bench: str, description: str | None = None,
+                 default_out: str | None = None,
+                 parser: argparse.ArgumentParser | None = None):
+        self.bench = bench
+        self.parser = parser or argparse.ArgumentParser(
+            description=description,
+            formatter_class=argparse.RawDescriptionHelpFormatter)
+        g = self.parser.add_argument_group("results store / output")
+        g.add_argument("--json", action="store_true",
+                       help="print the legacy JSON record to stdout")
+        g.add_argument("--out", default=default_out,
+                       help="also mirror the legacy record to this path "
+                            "(e.g. BENCH_%s.json)" % bench)
+        g.add_argument("--store", default=None,
+                       help="results-store directory (default: "
+                            "$REPRO_RESULTS_STORE or ./results_store)")
+        g.add_argument("--no-store", action="store_true",
+                       help="do not touch the results store")
+        g.add_argument("--force", action="store_true",
+                       help="re-measure even when this exact config + "
+                            "environment is already in the store")
+        g.add_argument("--profile", action="store_true",
+                       help="capture a jax.profiler trace around the "
+                            "bench's hot sections")
+        g.add_argument("--profile-dir", default="profiles",
+                       help="root directory for --profile trace capture")
+        self.args = None
+        self.trace_dirs = []
+        self._fp = None
+
+    # -- argument plumbing ---------------------------------------------
+    def add_argument(self, *a, **kw):
+        return self.parser.add_argument(*a, **kw)
+
+    def parse(self, argv=None) -> argparse.Namespace:
+        self.args = self.parser.parse_args(argv)
+        return self.args
+
+    def _require_args(self):
+        if self.args is None:
+            raise RuntimeError("BenchRun.parse() must run before "
+                               "store/profile/emit are used")
+
+    # -- store access ---------------------------------------------------
+    @property
+    def store(self):
+        """ResultsStore for this run, or None under --no-store."""
+        self._require_args()
+        if self.args.no_store:
+            return None
+        return ResultsStore(self.args.store or default_store_root())
+
+    def _fingerprint(self) -> dict:
+        if self._fp is None:
+            self._fp = fingerprint()
+        return self._fp
+
+    def cached(self, config: dict):
+        """The stored record for this exact config + environment, or
+        None when unmeasured (or under --force / --no-store)."""
+        self._require_args()
+        if self.args.force:
+            return None
+        store = self.store
+        if store is None:
+            return None
+        chash = config_hash(self.bench, config)
+        fkey = fingerprint_key(self._fingerprint())
+        if not store.has(self.bench, chash, fkey):
+            return None
+        return store.latest(self.bench, chash, fkey)
+
+    # -- profiler capture ----------------------------------------------
+    def profile(self, tag: str = "trace"):
+        """Context manager: a jax.profiler trace capture under
+        --profile, a no-op otherwise. Each tag gets its own directory
+        under <profile-dir>/<bench>/; repeated tags get -2, -3, ..."""
+        self._require_args()
+        if not self.args.profile:
+            return contextlib.nullcontext()
+        import jax
+        base = os.path.join(self.args.profile_dir, self.bench, tag)
+        path, n = base, 1
+        while path in self.trace_dirs or os.path.exists(path):
+            n += 1
+            path = f"{base}-{n}"
+        os.makedirs(path, exist_ok=True)
+        self.trace_dirs.append(path)
+        print(f"[{self.bench}] profiling -> {path}", file=sys.stderr,
+              flush=True)
+        return jax.profiler.trace(path)
+
+    # -- emission -------------------------------------------------------
+    def emit(self, config: dict, metrics: dict, payload) -> dict:
+        """Record a finished measurement: append to the store, mirror
+        the legacy record to --out, echo it to stdout under --json.
+        Returns the store record."""
+        self._require_args()
+        extra = {}
+        if self.trace_dirs:
+            extra["profile_trace_dirs"] = list(self.trace_dirs)
+        rec = make_record(self.bench, config, metrics, payload=payload,
+                          fp=self._fingerprint(), extra=extra)
+        store = self.store
+        if store is not None:
+            store.append(rec)
+        if self.args.json:
+            print(dumps_record(payload))
+        if self.args.out:
+            write_record(self.args.out, payload)
+        return rec
+
+    def replay(self, record: dict) -> dict:
+        """Serve a cache hit: re-emit the stored legacy payload through
+        the same --json/--out paths a fresh measurement would use, and
+        say so on stderr. Nothing is appended to the store."""
+        self._require_args()
+        payload = record.get("payload")
+        print(f"[{self.bench}] cached: config {record['config_hash']} "
+              f"already measured on this environment "
+              f"({record.get('created_at', '?')}); use --force to "
+              f"re-measure", file=sys.stderr, flush=True)
+        if payload is not None:
+            if self.args.json:
+                print(dumps_record(payload))
+            if self.args.out:
+                write_record(self.args.out, payload)
+        return record

@@ -1,0 +1,430 @@
+"""Results store, BenchRun runner, and trajectory gate.
+
+Covers the contracts the rest of the repo leans on: config-hash
+stability under dict key order, the append-only invariant, fingerprint
+isolation of trajectories, the declared-direction regression gate
+(fires at 25%, quiet within threshold), the profiler flag producing a
+real trace directory, run.py's skip-if-measured cache, and the grep
+test that keeps every benchmark emitting through repro.results.
+"""
+from __future__ import annotations
+
+import glob
+import io
+import json
+import os
+import re
+import sys
+
+import pytest
+
+from repro.results import (BenchRun, ResultsStore, canonical_json,
+                           check_store, config_hash, fingerprint_key,
+                           higher, lower, make_record)
+from repro.results.legacy import legacy_direction, legacy_metrics
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CPU_FP = {"platform": "cpu", "device_kind": "cpu", "device_count": 1,
+          "jax_version": "0.4.37"}
+TPU_FP = {"platform": "tpu", "device_kind": "TPU v4", "device_count": 8,
+          "jax_version": "0.4.37"}
+
+
+def _rec(bench="kernel", config=None, metrics=None, fp=CPU_FP, **kw):
+    return make_record(bench, config or {"mode": "sweep"},
+                       metrics or {"best_gbps": higher(10.0)},
+                       fp=fp, **kw)
+
+
+# ---------------------------------------------------------------------------
+# config hash
+# ---------------------------------------------------------------------------
+def test_config_hash_stable_under_dict_key_order():
+    a = {"steps": 20, "shapes": [[8, 4], [16, 8]], "dataset": "gowalla"}
+    b = {"dataset": "gowalla", "shapes": [[8, 4], [16, 8]], "steps": 20}
+    assert config_hash("kernel", a) == config_hash("kernel", b)
+    # nested dicts too
+    a2 = {"cfg": {"x": 1, "y": 2}}
+    b2 = {"cfg": {"y": 2, "x": 1}}
+    assert config_hash("kernel", a2) == config_hash("kernel", b2)
+
+
+def test_config_hash_sensitive_to_values_list_order_and_bench():
+    base = {"shapes": [[8, 4], [16, 8]]}
+    assert config_hash("kernel", base) \
+        != config_hash("kernel", {"shapes": [[16, 8], [8, 4]]})
+    assert config_hash("kernel", base) != config_hash("server", base)
+    assert config_hash("kernel", base) \
+        != config_hash("kernel", {"shapes": [[8, 4], [16, 8]], "x": 1})
+
+
+def test_canonical_json_normalizes_tuples_and_numpy():
+    np = pytest.importorskip("numpy")
+    assert canonical_json({"a": (1, 2)}) == canonical_json({"a": [1, 2]})
+    assert canonical_json({"a": np.int64(3)}) == canonical_json({"a": 3})
+    with pytest.raises(TypeError):
+        canonical_json({"a": object()})
+
+
+# ---------------------------------------------------------------------------
+# store: append-only, fingerprint isolation, bless
+# ---------------------------------------------------------------------------
+def test_append_only_invariant(tmp_path):
+    store = ResultsStore(str(tmp_path / "store"))
+    store.append(_rec(metrics={"best_gbps": higher(10.0)}))
+    shard = store.shard_path("kernel")
+    before = open(shard, "rb").read()
+    store.append(_rec(metrics={"best_gbps": higher(11.0)}))
+    after = open(shard, "rb").read()
+    # the second append extended the shard; every prior byte survived
+    assert after.startswith(before)
+    assert len(store.records("kernel")) == 2
+
+
+def test_corrupt_lines_surfaced_not_dropped(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    store.append(_rec())
+    with open(store.shard_path("kernel"), "a") as f:
+        f.write("{not json\n")
+    lines = store.lines("kernel")
+    assert [ln.get("op") for ln in lines] == [None, "corrupt"]
+    assert len(store.records("kernel")) == 1
+
+
+def test_fingerprint_mismatch_isolates_trajectories(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    cfg = {"mode": "sweep"}
+    store.append(_rec(config=cfg, fp=CPU_FP,
+                      metrics={"best_gbps": higher(10.0)}))
+    store.append(_rec(config=cfg, fp=TPU_FP,
+                      metrics={"best_gbps": higher(500.0)}))
+    chash = config_hash("kernel", cfg)
+    cpu_key, tpu_key = fingerprint_key(CPU_FP), fingerprint_key(TPU_FP)
+    assert cpu_key != tpu_key
+    assert [r["metrics"]["best_gbps"]["value"]
+            for r in store.history("kernel", chash, cpu_key)] == [10.0]
+    assert [r["metrics"]["best_gbps"]["value"]
+            for r in store.history("kernel", chash, tpu_key)] == [500.0]
+    # and the gate never mixes them: a CPU number 50x below the TPU one
+    # is not a regression, each trajectory has exactly one record
+    warnings, notes = check_store(store)
+    assert warnings == []
+    assert len(notes) == 2 and all("first record" in n for n in notes)
+
+
+def test_bless_restarts_trajectory(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    cfg = {"mode": "sweep"}
+    chash = config_hash("kernel", cfg)
+    key = fingerprint_key(CPU_FP)
+    store.append(_rec(config=cfg, metrics={"p50_ms": lower(1.0)}))
+    store.bless("kernel", chash, reason="accepted slower path")
+    store.append(_rec(config=cfg, metrics={"p50_ms": lower(5.0)}))
+    hist = store.history("kernel", chash, key)
+    assert [r["metrics"]["p50_ms"]["value"] for r in hist] == [5.0]
+    warnings, _ = check_store(store)   # 5x slower, but blessed away
+    assert warnings == []
+
+
+def test_imported_records_never_satisfy_cache(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    fp = {"imported": True, "platform": "cpu"}
+    rec = _rec(config={"mode": "sweep"}, fp=fp)
+    assert rec["fingerprint_key"] == "imported"
+    store.append(rec)
+    assert not store.has("kernel", rec["config_hash"], "imported")
+
+
+# ---------------------------------------------------------------------------
+# gate: declared directions, thresholds, fallbacks
+# ---------------------------------------------------------------------------
+def _seed_trajectory(store, values, metric="best_gbps", direction=higher,
+                     cfg=None):
+    for v in values:
+        store.append(_rec(config=cfg or {"mode": "sweep"},
+                          metrics={metric: direction(v)}))
+
+
+def test_gate_fires_on_25pct_regression_higher_is_better(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    _seed_trajectory(store, [10.0, 10.2, 9.9, 7.5])   # median 10.0 -> 7.5
+    warnings, _ = check_store(store, threshold=0.20)
+    assert len(warnings) == 1
+    assert "best_gbps" in warnings[0]
+    assert "higher-is-better" in warnings[0]
+
+
+def test_gate_fires_on_25pct_regression_lower_is_better(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    _seed_trajectory(store, [8.0, 8.1, 7.9, 10.0], metric="p50_ms",
+                     direction=lower)
+    warnings, _ = check_store(store, threshold=0.20)
+    assert len(warnings) == 1 and "p50_ms" in warnings[0]
+    assert "lower-is-better" in warnings[0]
+
+
+def test_gate_quiet_within_threshold(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    _seed_trajectory(store, [10.0, 10.2, 9.9, 9.0])   # -10% < 20%
+    warnings, _ = check_store(store, threshold=0.20)
+    assert warnings == []
+
+
+def test_gate_zero_baseline_rule(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    _seed_trajectory(store, [0, 0, 2], metric="compiles", direction=lower)
+    warnings, _ = check_store(store)
+    assert len(warnings) == 1 and "rose from 0" in warnings[0]
+
+
+def test_gate_uses_median_of_last_n(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    # ancient slow history must age out of the window: with last_n=2 the
+    # baseline is median(10, 10) = 10, so 7 is a regression even though
+    # a 5-deep window's median is dragged down to 1 by the early records
+    _seed_trajectory(store, [1.0, 1.0, 1.0, 10.0, 10.0, 7.0])
+    warnings, _ = check_store(store, threshold=0.20, last_n=2)
+    assert len(warnings) == 1 and "n=2" in warnings[0]
+    warnings_all, _ = check_store(store, threshold=0.20, last_n=5)
+    assert warnings_all == []          # median(1,1,1,10,10) = 1 -> 7 is up
+
+
+def test_gate_imported_fallback_is_advisory(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    legacy = {"bench": "kernel", "platform": "cpu",
+              "fused": [{"variant": "fused", "us_per_call": 3.0,
+                         "achieved_gbps": 10.0}],
+              "codebook_lookup": []}
+    store.append(make_record(
+        "kernel", {"imported_from": "BENCH_kernel.json", "legacy": legacy},
+        legacy_metrics("BENCH_kernel", legacy), payload=legacy,
+        fp={"imported": True, "platform": "cpu"}))
+    # first store-native record: 40% below the imported gbps number.
+    # Imported configs are unknowable, so this is ADVISORY (a note),
+    # never a hard failure — only same-trajectory regressions warn.
+    store.append(_rec(metrics={"best_fused_gbps": higher(6.0)}))
+    warnings, notes = check_store(store, threshold=0.20)
+    assert warnings == []
+    assert any("no same-fingerprint history" in n for n in notes)
+    assert any("imported legacy baseline" in n for n in notes)
+
+
+# ---------------------------------------------------------------------------
+# declared directions replace the name heuristic (satellite regression)
+# ---------------------------------------------------------------------------
+def test_legacy_direction_pins():
+    # the canonical trap: "speedup_vs_seed" ends in "_s"-ish tokens but
+    # MUST stay higher-is-better; sweep times must stay lower-is-better
+    assert legacy_direction("speedup_vs_seed") == "higher"
+    assert legacy_direction("best_speedup_vs_seed") == "higher"
+    assert legacy_direction("sweep_ms") == "lower"
+    assert legacy_direction("10k_sweep_ms") == "lower"
+    assert legacy_direction("unknowable_metric") is None
+
+
+def test_store_native_records_declare_directions():
+    rec = _rec(metrics={"best_speedup_vs_seed": higher(3.0),
+                        "sweep_ms": lower(22.0)})
+    assert rec["metrics"]["best_speedup_vs_seed"]["higher_is_better"] is True
+    assert rec["metrics"]["sweep_ms"]["higher_is_better"] is False
+    with pytest.raises(ValueError):
+        make_record("kernel", {}, {"raw": 3.0}, fp=CPU_FP)  # undeclared
+
+
+def test_legacy_metrics_tag_heuristic_source():
+    rec = {"bench": "server", "platform": "cpu", "sustained_qps": 100.0,
+           "e2e_p50_ms": 2.0}
+    out = legacy_metrics("BENCH_server", rec)
+    assert out["sustained_qps"]["higher_is_better"] is True
+    assert out["e2e_p50_ms"]["higher_is_better"] is False
+    assert all(m["direction_source"] == "heuristic" for m in out.values())
+
+
+# ---------------------------------------------------------------------------
+# BenchRun: flags, emission, cache, profiler
+# ---------------------------------------------------------------------------
+def test_benchrun_emit_writes_store_and_mirror(tmp_path, capsys):
+    out = tmp_path / "BENCH_kernel.json"
+    run = BenchRun("kernel")
+    run.parse(["--json", "--store", str(tmp_path / "store"),
+               "--out", str(out)])
+    cfg = {"mode": "sweep"}
+    run.emit(cfg, {"best_gbps": higher(10.0)}, payload={"bench": "kernel"})
+    # store append
+    rec = ResultsStore(str(tmp_path / "store")).latest(
+        "kernel", config_hash("kernel", cfg))
+    assert rec is not None
+    assert rec["metrics"]["best_gbps"] == {"value": 10.0,
+                                           "higher_is_better": True}
+    # legacy mirror + --json echo both carry the payload verbatim
+    assert json.loads(out.read_text()) == {"bench": "kernel"}
+    assert json.loads(capsys.readouterr().out) == {"bench": "kernel"}
+
+
+def test_benchrun_cached_roundtrip_and_force(tmp_path):
+    cfg = {"mode": "sweep"}
+    run = BenchRun("kernel")
+    run.parse(["--store", str(tmp_path)])
+    assert run.cached(cfg) is None                 # nothing measured yet
+    run.emit(cfg, {"best_gbps": higher(10.0)}, payload=None)
+    hit = run.cached(cfg)
+    assert hit is not None and hit["config_hash"] == config_hash(
+        "kernel", cfg)
+    assert run.cached({"mode": "other"}) is None   # different config
+    forced = BenchRun("kernel")
+    forced.parse(["--store", str(tmp_path), "--force"])
+    assert forced.cached(cfg) is None              # --force re-measures
+
+
+def test_benchrun_no_store(tmp_path):
+    run = BenchRun("kernel")
+    run.parse(["--no-store", "--store", str(tmp_path)])
+    assert run.store is None
+    run.emit({"m": 1}, {"g": higher(1.0)}, payload=None)
+    assert not os.path.exists(str(tmp_path / "kernel.jsonl"))
+
+
+def test_profile_flag_produces_nonempty_trace_dir(tmp_path):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    run = BenchRun("kernel")
+    run.parse(["--profile", "--profile-dir", str(tmp_path / "prof"),
+               "--store", str(tmp_path / "store")])
+    with run.profile("smoke"):
+        jnp.dot(jnp.ones((64, 64)), jnp.ones((64, 64))).block_until_ready()
+    assert len(run.trace_dirs) == 1
+    files = [p for p in glob.glob(os.path.join(run.trace_dirs[0], "**"),
+                                  recursive=True) if os.path.isfile(p)]
+    assert files, "profiler produced no trace files"
+    rec = run.emit({"mode": "sweep"}, {"g": higher(1.0)}, payload=None)
+    assert rec["profile_trace_dirs"] == run.trace_dirs
+
+
+def test_profile_off_is_noop(tmp_path):
+    run = BenchRun("kernel")
+    run.parse(["--store", str(tmp_path)])
+    with run.profile("smoke"):
+        pass
+    assert run.trace_dirs == []
+
+
+# ---------------------------------------------------------------------------
+# run.py --fast skip-if-measured (satellite)
+# ---------------------------------------------------------------------------
+class _FakeModule:
+    calls = 0
+
+    @staticmethod
+    def run(fast=True):
+        _FakeModule.calls += 1
+        return [("fake/row", 1.0, "x=1")]
+
+
+def test_run_py_second_invocation_is_cached(tmp_path, capsys, monkeypatch):
+    from benchmarks import run as bench_run
+    monkeypatch.setitem(sys.modules, "benchmarks._fake_mod", _FakeModule)
+    _FakeModule.calls = 0
+    store = str(tmp_path / "store")
+    argv = ["--fast", "--store", store]
+    assert bench_run.main(argv, modules=["_fake_mod"]) == 0
+    first = capsys.readouterr().out
+    assert "_fake_mod done" in first and "0 failures" in first
+    assert _FakeModule.calls == 1
+    # identical config + environment: nothing runs the second time
+    assert bench_run.main(argv, modules=["_fake_mod"]) == 0
+    second = capsys.readouterr().out
+    assert "_fake_mod cached" in second and "1 cached" in second
+    assert _FakeModule.calls == 1
+    # --force re-measures
+    assert bench_run.main(argv + ["--force"], modules=["_fake_mod"]) == 0
+    assert _FakeModule.calls == 2
+    # flipping the mode is a different config hash -> runs again
+    assert bench_run.main(["--full", "--store", store],
+                          modules=["_fake_mod"]) == 0
+    assert _FakeModule.calls == 3
+
+
+# ---------------------------------------------------------------------------
+# bench_summary on the store
+# ---------------------------------------------------------------------------
+def test_bench_summary_store_check_strict_exit(tmp_path, capsys):
+    from benchmarks.bench_summary import main as summary_main
+    store = ResultsStore(str(tmp_path))
+    _seed_trajectory(store, [10.0, 10.1, 9.9, 6.0])
+    assert summary_main(["--check", "--store", str(tmp_path)]) == 0
+    assert "WARNING" in capsys.readouterr().out
+    assert summary_main(["--check", "--store", str(tmp_path),
+                         "--strict"]) == 1
+    capsys.readouterr()
+    # bless the regression; strict check goes green
+    chash = config_hash("kernel", {"mode": "sweep"})
+    assert summary_main(["--bless", f"kernel:{chash}", "--reason", "ok",
+                         "--store", str(tmp_path)]) == 0
+    assert summary_main(["--check", "--store", str(tmp_path),
+                         "--strict"]) == 0
+
+
+def test_bench_summary_store_table(tmp_path, capsys):
+    from benchmarks.bench_summary import main as summary_main
+    store = ResultsStore(str(tmp_path))
+    _seed_trajectory(store, [10.0, 11.0])
+    assert summary_main(["--store", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "kernel[" in out and "n=2" in out and "best_gbps=11" in out
+
+
+# ---------------------------------------------------------------------------
+# migration
+# ---------------------------------------------------------------------------
+def test_migrate_store_seeds_and_is_idempotent(tmp_path, capsys):
+    from benchmarks.migrate_store import main as migrate_main
+    legacy_dir = tmp_path / "legacy"
+    legacy_dir.mkdir()
+    (legacy_dir / "BENCH_stream.json").write_text(json.dumps(
+        {"bench": "stream", "platform": "cpu", "swap_p99_ms": 10.0,
+         "recall_stream": 0.4, "compiles": 0}))
+    store_dir = str(tmp_path / "store")
+    argv = ["--dir", str(legacy_dir), "--store", store_dir]
+    assert migrate_main(argv) == 0
+    assert "1 imported" in capsys.readouterr().out
+    recs = ResultsStore(store_dir).records("stream")
+    assert len(recs) == 1
+    assert recs[0]["fingerprint_key"] == "imported"
+    assert recs[0]["metrics"]["swap_p99_ms"]["higher_is_better"] is False
+    assert recs[0]["metrics"]["recall_stream"]["higher_is_better"] is True
+    # re-running imports nothing new
+    assert migrate_main(argv) == 0
+    assert "1 skipped" in capsys.readouterr().out
+    assert len(ResultsStore(store_dir).records("stream")) == 1
+
+
+def test_committed_store_is_seeded_and_gate_green():
+    """The repo ships a results_store/ seeded from the legacy BENCH
+    files; the committed state must pass its own gate."""
+    store = ResultsStore(os.path.join(REPO, "results_store"))
+    assert store.benches(), "committed results_store/ is missing"
+    for bench in ("cluster_scale", "kernel", "server", "stream"):
+        assert store.records(bench), f"no committed records for {bench}"
+    warnings, _ = check_store(store, threshold=0.5)
+    assert warnings == [], f"committed store fails its own gate: {warnings}"
+
+
+# ---------------------------------------------------------------------------
+# architecture: benchmarks emit ONLY through repro.results
+# ---------------------------------------------------------------------------
+def test_no_raw_json_dump_in_benchmarks():
+    """Every bench record flows through repro.results (dumps_record /
+    write_record / the store): raw json.dump(s) calls under benchmarks/
+    would reopen the door to records that bypass the trajectory."""
+    offenders = []
+    for path in sorted(glob.glob(os.path.join(REPO, "benchmarks", "*.py"))):
+        src = open(path).read()
+        for i, line in enumerate(src.splitlines(), 1):
+            if re.search(r"\bjson\.dumps?\s*\(", line):
+                offenders.append(f"{os.path.basename(path)}:{i}: "
+                                 f"{line.strip()}")
+    assert offenders == [], (
+        "raw json.dump(s) in benchmarks/ — emit through "
+        "repro.results.dumps_record/write_record instead:\n"
+        + "\n".join(offenders))

@@ -207,7 +207,17 @@ def main(argv=None):
                          "regression for that configuration")
     ap.add_argument("--reason", default="",
                     help="why the regression in --bless is acceptable")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSONL",
+                    help="render a repro.obs trace export (tree + "
+                         "rollup) next to the table — the file a bench "
+                         "run under --trace wrote, recorded on its "
+                         "store record under extra.obs.trace_file")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro.launch.obs_report import report as obs_report
+        print(obs_report(args.trace))
+        print()
 
     use_store = args.store is not None or (args.dir is None
                                            and args.against is None)

@@ -129,8 +129,11 @@ def server_metrics(record) -> dict:
     out = {}
     for key, make in (("sustained_qps", higher), ("e2e_p50_ms", lower),
                       ("e2e_p99_ms", lower),
+                      ("queue_delay_p50_ms", lower),
                       ("queue_delay_p99_ms", lower),
+                      ("batch_fill_mean", higher),
                       ("swap_pause_ms", lower),
+                      ("swap_drain_ms", lower),
                       ("compiles_under_load", lower),
                       ("shed", lower), ("failed", lower)):
         v = record.get(key)

@@ -235,7 +235,10 @@ def stream_metrics(record) -> dict:
     out = {}
     for key, make in (("cold_assign_first_ms", lower),
                       ("cold_assign_warm_p50_ms", lower),
+                      ("swap_p50_ms", lower),
                       ("swap_p99_ms", lower),
+                      ("refresh_total_s", lower),
+                      ("tune_total_s", lower),
                       ("refresh_steady_frac_of_full", lower),
                       ("maintenance_frac_of_full", lower),
                       ("recall_frozen", higher),

@@ -16,15 +16,21 @@ file as a smoke test):
   * every response arrives and is identity-correct per request,
   * the mid-load swap takes the in-place (capacity-ladder) path,
   * compile count after warmup stays FLAT through concurrent load,
-    the swap included.
+    the swap included,
+  * under --trace-out, the exported JSONL trace holds, for at least one
+    request, the full nested span chain (request -> admit/queue/batch ->
+    dispatch -> device) under a single trace ID, and obs_report renders
+    it — the end-to-end observability contract of ISSUE 10.
 
 Run:  PYTHONPATH=src python examples/frontdoor_serve.py [--steps N]
+      [--trace-out traces/frontdoor_trace.jsonl]
 """
 import argparse
 import threading
 
 import numpy as np
 
+from repro import obs
 from repro.core import ClusterEngine
 from repro.data import paperlike_dataset
 from repro.frontdoor import Frontdoor, FrontdoorConfig
@@ -39,7 +45,11 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--requests", type=int, default=25,
                     help="requests per client thread")
+    ap.add_argument("--trace-out", default=None, metavar="JSONL",
+                    help="enable obs tracing and export the trace here")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        obs.configure(enabled=True, sample_rate=1.0)
 
     # --- publish two versions from one training run ---------------------
     _, _, _, train, _ = paperlike_dataset("beauty_s", seed=0)
@@ -111,6 +121,31 @@ def main(argv=None):
         f"compiles grew under load: {compiles_warm} -> {fd.compile_count}"
     print(f"compiles: {compiles_warm} after warmup -> {fd.compile_count} "
           f"after concurrent load + hot swap — the ladder held")
+
+    # --- the trace contract (ISSUE 10 acceptance) -----------------------
+    if args.trace_out:
+        from repro.obs.report import read_trace, trace_ids, trace_tree
+        n = obs.export_jsonl(obs.get_tracer(), args.trace_out,
+                             metrics_snapshot=fd.telemetry.registry
+                             .snapshot())
+        assert n > 0, "tracing was on but no spans were exported"
+        data = read_trace(args.trace_out)     # raises if malformed
+
+        def depth(sp, d=1):
+            return max([d] + [depth(c, d + 1) for c in sp["children"]])
+
+        best = 0
+        for tid in trace_ids(data["spans"]):
+            spans = [s for s in data["spans"] if s["trace"] == tid]
+            roots = trace_tree(data["spans"], tid)
+            if (len(spans) >= 5 and len(roots) == 1
+                    and max(depth(r) for r in roots) >= 4):
+                best = max(best, len(spans))
+        assert best >= 5, \
+            "no request trace carried the full nested span chain " \
+            "(>=5 spans, depth >=4, one root) under a shared trace ID"
+        print(f"trace: {n} spans -> {args.trace_out}; deepest request "
+              f"trace has {best} spans under one trace ID")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.trace import get_tracer
+
 from .graph import BipartiteGraph
 from .sketch import Sketch, compact_labels
 from .weights import make_weights
@@ -373,8 +375,14 @@ class ClusterEngine:
               init_labels=None) -> Tuple[np.ndarray, int]:
         """Run one LP solve. Returns (labels int32[n_nodes], iters)."""
         s = self.resolve()
-        return s.solve(graph, wu, wv, gamma, budget, max_iters,
-                       init_labels, **self._mesh_kw(s))
+        with get_tracer().span("cluster_solve", solver=s.name,
+                               n_nodes=int(graph.n_nodes),
+                               n_edges=int(graph.n_edges),
+                               gamma=float(gamma)) as sp:
+            labels, iters = s.solve(graph, wu, wv, gamma, budget, max_iters,
+                                    init_labels, **self._mesh_kw(s))
+            sp.set(iters=int(iters))
+        return labels, iters
 
     def solve_grid(self, graph: BipartiteGraph, wu, wv, gammas,
                    budget: Optional[int] = None, max_iters: int = 8,
@@ -382,8 +390,12 @@ class ClusterEngine:
         """Solve a gamma grid (concurrent lanes when the solver batches).
         Returns (labels [L, n_nodes], iters [L])."""
         s = self.resolve()
-        return s.solve_many(graph, wu, wv, gammas, budget, max_iters,
-                            init_labels, **self._mesh_kw(s))
+        gammas = [float(g) for g in gammas]
+        with get_tracer().span("cluster_solve_grid", solver=s.name,
+                               n_nodes=int(graph.n_nodes),
+                               n_gammas=len(gammas)):
+            return s.solve_many(graph, wu, wv, gammas, budget, max_iters,
+                                init_labels, **self._mesh_kw(s))
 
     # -- gamma auto-tuning -------------------------------------------------
     def fit_gamma(self, graph: BipartiteGraph, wu, wv, budget: int, *,
@@ -437,79 +449,85 @@ class ClusterEngine:
                 f"solver='jax' for vmapped lanes)", stacklevel=2)
         gammas = sorted((float(gamma0) * (4.0 ** i)
                          for i in range(-3, grid - 3)), reverse=True)
-        solved_g, solved_lab, solved_it = [], [], []
-        if batched and s.batched_grid:
-            chain_seed = None    # warm-start seed carried across blocks
-            for lo in range(0, len(gammas), max(1, lanes)):
-                chunk = gammas[lo:lo + max(1, lanes)]
-                if not warm_start:
-                    labs, its = s.solve_many(graph, wu, wv, chunk, budget,
-                                             max_iters, init_labels=None,
-                                             **self._mesh_kw(s))
-                else:
-                    labs = its = None
-                    for _ in range(len(chunk)):
-                        if labs is None:       # round 1: block-wide seed
-                            init = chain_seed  # (None -> singletons)
-                        else:                  # lane i <- lane i-1
-                            shifted = [chain_seed if chain_seed is not None
-                                       else np.arange(graph.n_nodes,
-                                                      dtype=np.int32)]
-                            shifted += [labs[i] for i in
-                                        range(len(chunk) - 1)]
-                            init = np.stack(shifted)
-                        new_labs, its = s.solve_many(
-                            graph, wu, wv, chunk, budget, max_iters,
-                            init_labels=init, **self._mesh_kw(s))
-                        if labs is not None and np.array_equal(new_labs,
-                                                               labs):
-                            break              # chain fixed point
-                        labs = new_labs
-                    chain_seed = labs[len(chunk) - 1]
-                solved_g += chunk
-                solved_lab += [labs[i] for i in range(len(chunk))]
-                solved_it += [int(its[i]) for i in range(len(chunk))]
-        else:
-            prev = None
-            for g in gammas:
-                labels, it = s.solve(graph, wu, wv, g, budget, max_iters,
-                                     init_labels=prev if warm_start else None,
-                                     **self._mesh_kw(s))
-                if warm_start:
-                    prev = labels
-                solved_g.append(g)
-                solved_lab.append(labels)
-                solved_it.append(int(it))
+        with get_tracer().span("fit_gamma", solver=s.name,
+                               n_nodes=int(graph.n_nodes),
+                               budget=int(budget),
+                               grid=len(gammas)) as f_sp:
+            solved_g, solved_lab, solved_it = [], [], []
+            if batched and s.batched_grid:
+                chain_seed = None    # warm-start seed carried across blocks
+                for lo in range(0, len(gammas), max(1, lanes)):
+                    chunk = gammas[lo:lo + max(1, lanes)]
+                    if not warm_start:
+                        labs, its = s.solve_many(graph, wu, wv, chunk, budget,
+                                                 max_iters, init_labels=None,
+                                                 **self._mesh_kw(s))
+                    else:
+                        labs = its = None
+                        for _ in range(len(chunk)):
+                            if labs is None:       # round 1: block-wide seed
+                                init = chain_seed  # (None -> singletons)
+                            else:                  # lane i <- lane i-1
+                                shifted = [chain_seed if chain_seed is not None
+                                           else np.arange(graph.n_nodes,
+                                                          dtype=np.int32)]
+                                shifted += [labs[i] for i in
+                                            range(len(chunk) - 1)]
+                                init = np.stack(shifted)
+                            new_labs, its = s.solve_many(
+                                graph, wu, wv, chunk, budget, max_iters,
+                                init_labels=init, **self._mesh_kw(s))
+                            if labs is not None and np.array_equal(new_labs,
+                                                                   labs):
+                                break              # chain fixed point
+                            labs = new_labs
+                        chain_seed = labs[len(chunk) - 1]
+                    solved_g += chunk
+                    solved_lab += [labs[i] for i in range(len(chunk))]
+                    solved_it += [int(its[i]) for i in range(len(chunk))]
+            else:
+                prev = None
+                for g in gammas:
+                    labels, it = self.solve(
+                        graph, wu, wv, g, budget, max_iters,
+                        init_labels=prev if warm_start else None)
+                    if warm_start:
+                        prev = labels
+                    solved_g.append(g)
+                    solved_lab.append(labels)
+                    solved_it.append(int(it))
 
-        ks, qs = _score_partitions(graph, np.stack(solved_lab))
-        best = self._select(budget, solved_g, solved_lab, solved_it, ks, qs)
-        if best is None:     # nothing within budget: closest-K fallback
-            i = int(np.argmin(ks))
-            return solved_g[i], solved_lab[i], solved_it[i]
+            ks, qs = _score_partitions(graph, np.stack(solved_lab))
+            best = self._select(budget, solved_g, solved_lab, solved_it, ks, qs)
+            if best is None:     # nothing within budget: closest-K fallback
+                i = int(np.argmin(ks))
+                f_sp.set(gamma=float(solved_g[i]), fallback=True)
+                return solved_g[i], solved_lab[i], solved_it[i]
 
-        # refinement: the grid is x4-spaced; probe the x2 neighbours,
-        # skipping probes that land on an already-solved grid gamma
-        q_best, g_best, lab_best, it_best = best
-        probes = [g for g in (g_best * 2.0, g_best / 2.0)
-                  if not any(np.isclose(g, gg, rtol=1e-6)
-                             for gg in solved_g)]
-        if probes:
-            p_lab, p_it = [], []
-            for g in probes:
-                seed = None
-                if warm_start:
-                    finer = [gg for gg in solved_g if gg > g]
-                    if finer:
-                        seed = solved_lab[solved_g.index(min(finer))]
-                lab, it = s.solve(graph, wu, wv, g, budget, max_iters,
-                                  init_labels=seed, **self._mesh_kw(s))
-                p_lab.append(lab)
-                p_it.append(int(it))
-            pks, pqs = _score_partitions(graph, np.stack(p_lab))
-            ref = self._select(budget, probes, p_lab, p_it, pks, pqs)
-            if ref is not None and ref[0] > q_best:
-                q_best, g_best, lab_best, it_best = ref
-        return g_best, lab_best, it_best
+            # refinement: the grid is x4-spaced; probe the x2 neighbours,
+            # skipping probes that land on an already-solved grid gamma
+            q_best, g_best, lab_best, it_best = best
+            probes = [g for g in (g_best * 2.0, g_best / 2.0)
+                      if not any(np.isclose(g, gg, rtol=1e-6)
+                                 for gg in solved_g)]
+            if probes:
+                p_lab, p_it = [], []
+                for g in probes:
+                    seed = None
+                    if warm_start:
+                        finer = [gg for gg in solved_g if gg > g]
+                        if finer:
+                            seed = solved_lab[solved_g.index(min(finer))]
+                    lab, it = self.solve(graph, wu, wv, g, budget,
+                                         max_iters, init_labels=seed)
+                    p_lab.append(lab)
+                    p_it.append(int(it))
+                pks, pqs = _score_partitions(graph, np.stack(p_lab))
+                ref = self._select(budget, probes, p_lab, p_it, pks, pqs)
+                if ref is not None and ref[0] > q_best:
+                    q_best, g_best, lab_best, it_best = ref
+            f_sp.set(gamma=float(g_best))
+            return g_best, lab_best, it_best
 
     @staticmethod
     def _select(budget, gs, labs, its, ks, qs):

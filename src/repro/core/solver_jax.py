@@ -35,12 +35,14 @@ benchmark reference the while_loop is validated bit-for-bit against.
 from __future__ import annotations
 
 import functools
-import time
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import clock
+from repro.obs.trace import get_tracer
 
 from .graph import BipartiteGraph, pad_rung
 
@@ -684,8 +686,11 @@ def _streamed_half(blocks, n_side: int, n_labels: int, opp_labels, w_self,
     acc_own = jnp.zeros((n_side,), jnp.float32)
     nxt = (jax.device_put(blocks[0][0]), jax.device_put(blocks[0][1])) \
         if blocks else None
+    tracer = get_tracer()
+    parent = tracer.current()
     for i in range(len(blocks)):
         cur = nxt
+        t0 = clock.now()
         out = block_fn(acc_best, acc_lab, acc_own, cur[0], cur[1],
                        opp_labels, w_self, w_by_label, own_labels, gamma,
                        n_side=n_side, n_labels=n_labels)
@@ -695,6 +700,12 @@ def _streamed_half(blocks, n_side: int, n_labels: int, opp_labels, w_self,
             nxt = (jax.device_put(blocks[i + 1][0]),
                    jax.device_put(blocks[i + 1][1]))
         acc_best, acc_lab, acc_own = out
+        if parent is not None and parent.sampled:
+            # dispatch is async: this spans enqueue (+ the overlapped
+            # H2D of the next block), not device completion — the sweep
+            # span above it carries the blocking wall time
+            tracer.record_span("edge_block", t0, clock.now(),
+                               parent=parent, block=i)
     return commit_fn(acc_best, acc_lab, acc_own, w_self, w_by_label,
                      own_labels, gamma, n_labels=n_labels)
 
@@ -747,21 +758,29 @@ def lp_solve_streamed(graph: BipartiteGraph, w_users, w_items, gamma: float,
     it = 0
     done = False
     sweep_s = []
+    tracer = get_tracer()
     while not done and it < max_iters:
-        t0 = time.perf_counter()
-        item_labels = labels[n_users:]
-        w_items_by = w_by_label_fn(wv, item_labels, n=n)
-        new_u = _streamed_half(plan["user"][0], n_users, n, item_labels,
-                               wu, w_items_by, labels[:n_users], g, jits)
-        w_users_by = w_by_label_fn(wu, new_u, n=n)
-        new_v = _streamed_half(plan["item"][0], n_items, n, new_u,
-                               wv, w_users_by, item_labels, g, jits)
-        new = jnp.concatenate([new_u, new_v])
-        ku, kv = count_side_labels(new, n_users=n_users, n_items=n_items)
-        within = bud > 0 and int(ku) + int(kv) <= bud
-        converged = bool(jnp.array_equal(new, labels))
-        new.block_until_ready()
-        sweep_s.append(time.perf_counter() - t0)
+        t0 = clock.now()
+        # live span (child of the engine's ambient "cluster_solve" when
+        # one is open, else its own root): the per-block edge_block
+        # spans in _streamed_half nest under it
+        with tracer.span("lp_sweep", sweep=it) as sweep_sp:
+            item_labels = labels[n_users:]
+            w_items_by = w_by_label_fn(wv, item_labels, n=n)
+            new_u = _streamed_half(plan["user"][0], n_users, n,
+                                   item_labels, wu, w_items_by,
+                                   labels[:n_users], g, jits)
+            w_users_by = w_by_label_fn(wu, new_u, n=n)
+            new_v = _streamed_half(plan["item"][0], n_items, n, new_u,
+                                   wv, w_users_by, item_labels, g, jits)
+            new = jnp.concatenate([new_u, new_v])
+            ku, kv = count_side_labels(new, n_users=n_users,
+                                       n_items=n_items)
+            within = bud > 0 and int(ku) + int(kv) <= bud
+            converged = bool(jnp.array_equal(new, labels))
+            new.block_until_ready()
+            sweep_sp.set(converged=converged)
+        sweep_s.append(clock.now() - t0)
         labels = new
         it += 1
         done = within or converged

@@ -33,11 +33,12 @@ from __future__ import annotations
 import dataclasses
 import queue as queue_mod
 import threading
-import time
 from typing import Optional
 
 import numpy as np
 
+from repro.obs import clock
+from repro.obs.trace import Tracer, get_tracer
 from repro.serve.dispatch import chunk_plan
 from repro.serve.telemetry import FrontdoorTelemetry
 
@@ -71,13 +72,15 @@ class ContinuousBatcher:
 
     def __init__(self, queue, registry, telemetry: FrontdoorTelemetry,
                  cache=None, dispatch_lock: Optional[threading.Lock] = None,
-                 cfg: Optional[BatcherConfig] = None):
+                 cfg: Optional[BatcherConfig] = None,
+                 tracer: Optional[Tracer] = None):
         self._queue = queue
         self._registry = registry
         self._tele = telemetry
         self._cache = cache
         self._lock = dispatch_lock or threading.Lock()
         self.cfg = cfg or BatcherConfig()
+        self._tracer = tracer or get_tracer()
         self._thread: Optional[threading.Thread] = None
 
     # -- lifecycle ----------------------------------------------------------
@@ -120,7 +123,7 @@ class ContinuousBatcher:
             # wait bounded by the nearest pending flush deadline
             if pending:
                 oldest = min(reqs[0].t_submit for reqs in pending.values())
-                timeout = max(0.0, oldest + flush_s - time.perf_counter())
+                timeout = max(0.0, oldest + flush_s - clock.now())
             else:
                 timeout = self.cfg.idle_poll_ms / 1e3
             item = None
@@ -144,7 +147,7 @@ class ContinuousBatcher:
             # flush every group that is full or past its deadline
             # (stopping: flush everything — graceful shutdown serves
             # what was admitted)
-            now = time.perf_counter()
+            now = clock.now()
             for tenant in list(pending):
                 reqs = pending[tenant]
                 total = sum(r.n for r in reqs)
@@ -156,11 +159,13 @@ class ContinuousBatcher:
                 return
 
     def _flush(self, tenant: str, reqs) -> None:
-        now = time.perf_counter()
+        now = clock.now()
         live = []
         for r in reqs:
             if r.expired(now):
                 self._tele.bump("timeouts")
+                if r.span is not None:
+                    r.span.end(outcome="timeout")
                 r.ticket.reject(DeadlineExceeded(
                     f"request expired in queue after "
                     f"{(now - r.t_submit) * 1e3:.1f}ms"))
@@ -168,28 +173,55 @@ class ContinuousBatcher:
                 live.append(r)
         if not live:
             return
+        # requests whose trace was sampled get retroactive queue /
+        # batch / dispatch / device / respond spans committed below;
+        # with tracing off every r.span is the no-op NULL_SPAN
+        traced = [r for r in live
+                  if r.span is not None and r.span.sampled]
         ids = np.concatenate([r.user_ids for r in live])
         with self._lock:
-            t_dispatch = time.perf_counter()
+            t_dispatch = clock.now()
             try:
                 disp = self._registry.dispatcher(tenant)
+                t_dev0 = clock.now()
                 values, items = disp(ids)
+                t_dev1 = clock.now()
             except Exception as exc:
                 self._tele.bump("errors", len(live))
                 for r in live:
+                    if r.span is not None:
+                        r.span.end(outcome="error",
+                                   error=type(exc).__name__)
                     r.ticket.reject(exc)
                 return
             if self._cache is not None:
                 self._cache.put(tenant, ids, values, items)
+        t_done = clock.now()
         plan = chunk_plan(int(ids.shape[0]), disp.buckets)
+        n_padded = sum(b for _, b in plan)
         self._tele.record_batch(len(live), int(ids.shape[0]),
-                                sum(b for _, b in plan),
-                                [b for _, b in plan])
+                                n_padded, [b for _, b in plan])
+        for r in traced:
+            tr = self._tracer
+            tr.record_span("queue", r.t_submit, t_dispatch, parent=r.span)
+            batch = tr.record_span("batch", t_dispatch, t_done,
+                                   parent=r.span, n_requests=len(live),
+                                   n_ids=int(ids.shape[0]),
+                                   n_padded=n_padded)
+            disp_sp = tr.record_span("dispatch", t_dispatch, t_dev1,
+                                     parent=batch, tenant=tenant)
+            tr.record_span("device", t_dev0, t_dev1, parent=disp_sp)
         offset = 0
         for r in live:
             self._tele.queue_delay.record((t_dispatch - r.t_submit) * 1e3)
+            t_r0 = clock.now()
             r.ticket.resolve((values[offset:offset + r.n],
                               items[offset:offset + r.n]))
-            self._tele.e2e.record((time.perf_counter() - r.t_submit) * 1e3)
+            t_r1 = clock.now()
+            self._tele.e2e.record((t_r1 - r.t_submit) * 1e3)
             self._tele.bump("responses")
+            if r.span is not None and r.span.sampled:
+                self._tracer.record_span("respond", t_r0, t_r1,
+                                         parent=r.span)
+                r.span.end(outcome="ok")
             offset += r.n

@@ -33,6 +33,8 @@ from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import clock
+
 from .request import DeadlineExceeded, RequestShed
 
 __all__ = ["TrafficConfig", "arrival_times", "zipf_ids", "run_open_loop"]
@@ -106,14 +108,14 @@ def run_open_loop(frontdoor, cfg: TrafficConfig,
     tickets = []            # (ticket, t_scheduled)
     shed = 0
     next_action = 0
-    t0 = time.perf_counter()
+    t0 = clock.now()
     for i in range(offsets.size):
         target = t0 + offsets[i]
         while next_action < len(actions) \
                 and offsets[i] >= actions[next_action][0]:
             action_results.append(actions[next_action][1]())
             next_action += 1
-        delay = target - time.perf_counter()
+        delay = target - clock.now()
         if delay > 0:
             time.sleep(delay)
         tenant = tenants[which[i]]
@@ -127,7 +129,7 @@ def run_open_loop(frontdoor, cfg: TrafficConfig,
     while next_action < len(actions):        # actions past the last arrival
         action_results.append(actions[next_action][1]())
         next_action += 1
-    submit_span = time.perf_counter() - t0
+    submit_span = clock.now() - t0
 
     ok = timeouts = failed = 0
     for ticket in tickets:
@@ -138,7 +140,7 @@ def run_open_loop(frontdoor, cfg: TrafficConfig,
             timeouts += 1
         except Exception:
             failed += 1
-    span = time.perf_counter() - t0
+    span = clock.now() - t0
     offered = offsets.size / cfg.duration_s
     return {
         "offered": int(offsets.size),

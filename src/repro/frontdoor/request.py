@@ -12,10 +12,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Optional, Tuple
 
 import numpy as np
+
+from repro.obs import clock
 
 __all__ = ["Ticket", "Request", "RequestShed", "DeadlineExceeded"]
 
@@ -77,8 +78,11 @@ class Request:
                FLUSH time, so requests queued across a swap serve the
                newly published version; in-flight batches keep the old)
     ticket:    the caller's future
-    t_submit:  perf_counter() at admission (queue-delay / e2e clock)
-    deadline:  absolute perf_counter() budget, or None
+    t_submit:  obs clock reading at admission (queue-delay / e2e clock)
+    deadline:  absolute obs-clock budget, or None
+    span:      the request's root trace span (opened on the caller
+               thread at submit, closed on the batcher thread; the obs
+               NULL_SPAN when tracing is off or the trace unsampled)
     """
 
     user_ids: np.ndarray
@@ -86,6 +90,7 @@ class Request:
     ticket: Ticket
     t_submit: float
     deadline: Optional[float] = None
+    span: Optional[object] = None
 
     @property
     def n(self) -> int:
@@ -94,5 +99,4 @@ class Request:
     def expired(self, now: Optional[float] = None) -> bool:
         if self.deadline is None:
             return False
-        return (now if now is not None else time.perf_counter()) \
-            > self.deadline
+        return (now if now is not None else clock.now()) > self.deadline

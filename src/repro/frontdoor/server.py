@@ -28,17 +28,25 @@ merges it with the registry's session/compile view. The compile-count
 invariant survives the whole stack: warmed sessions serve ANY traffic
 pattern, swaps included, with zero new XLA programs while state fits
 the capacity ladder.
+
+Tracing: ``submit`` opens a per-request root span ("request") with an
+"admit" child on the caller thread and hands the root to the batcher on
+the Request; the batcher attributes queue/batch/dispatch/device/respond
+time retroactively and closes the root (see ContinuousBatcher._flush).
+With the ambient tracer disabled — the default — every span call is the
+shared no-op NULL_SPAN.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue as queue_mod
 import threading
-import time
 from typing import Optional
 
 import numpy as np
 
+from repro.obs import clock
+from repro.obs.trace import Tracer, get_tracer
 from repro.serve import DEFAULT_BUCKETS
 from repro.serve.telemetry import FrontdoorTelemetry
 
@@ -83,13 +91,15 @@ class Frontdoor:
 
     def __init__(self, cfg: Optional[FrontdoorConfig] = None,
                  registry: Optional[TenantRegistry] = None,
-                 telemetry: Optional[FrontdoorTelemetry] = None):
+                 telemetry: Optional[FrontdoorTelemetry] = None,
+                 tracer: Optional[Tracer] = None):
         self.cfg = cfg or FrontdoorConfig()
         self.registry = registry or TenantRegistry(
             k=self.cfg.k, capacity=self.cfg.capacity,
             backend=self.cfg.backend, scorer=self.cfg.scorer,
             buckets=self.cfg.buckets)
         self.telemetry = telemetry or FrontdoorTelemetry()
+        self.tracer = tracer or get_tracer()
         self._queue = queue_mod.Queue(maxsize=self.cfg.queue_size)
         self._cache = (HotUserCache(self.cfg.cache_entries)
                        if self.cfg.cache_entries else None)
@@ -98,7 +108,8 @@ class Frontdoor:
             self._queue, self.registry, self.telemetry, cache=self._cache,
             dispatch_lock=self._dispatch_lock,
             cfg=BatcherConfig(flush_ms=self.cfg.flush_ms,
-                              max_batch=self.cfg.max_batch))
+                              max_batch=self.cfg.max_batch),
+            tracer=self.tracer)
         self._accepting = False
 
     # -- lifecycle ----------------------------------------------------------
@@ -151,35 +162,41 @@ class Frontdoor:
         if not self.running:
             raise RuntimeError("Frontdoor is not accepting requests "
                                "(call start(), and stop() only when done)")
-        t_submit = time.perf_counter()
+        t_submit = clock.now()
+        root = self.tracer.trace("request", tenant=tenant, n=int(ids.size))
         self.telemetry.bump("requests")
-        if self._cache is not None:
-            hit = self._cache.get(tenant, ids)
-            if hit is not None:
-                self.telemetry.bump("cache_hits")
-                self.telemetry.bump("responses")
-                ticket = Ticket()
-                ticket.resolve(hit)
-                self.telemetry.e2e.record(
-                    (time.perf_counter() - t_submit) * 1e3)
-                return ticket
-        if deadline_ms is None:
-            deadline_ms = self.cfg.default_deadline_ms
-        deadline = (t_submit + deadline_ms / 1e3
-                    if deadline_ms is not None else None)
-        req = Request(user_ids=ids, tenant=tenant, ticket=Ticket(),
-                      t_submit=t_submit, deadline=deadline)
-        try:
-            if self.cfg.policy == "shed":
-                self._queue.put_nowait(req)
-            else:
-                self._queue.put(req)
-        except queue_mod.Full:
-            self.telemetry.bump("shed")
-            raise RequestShed(
-                f"admission queue full ({self.cfg.queue_size} requests); "
-                f"policy=shed rejects instead of queueing further"
-            ) from None
+        with self.tracer.span("admit", parent=root) as admit:
+            if self._cache is not None:
+                hit = self._cache.get(tenant, ids)
+                if hit is not None:
+                    self.telemetry.bump("cache_hits")
+                    self.telemetry.bump("responses")
+                    ticket = Ticket()
+                    ticket.resolve(hit)
+                    self.telemetry.e2e.record(
+                        (clock.now() - t_submit) * 1e3)
+                    admit.set(outcome="cache_hit")
+                    root.end(outcome="cache_hit")
+                    return ticket
+            if deadline_ms is None:
+                deadline_ms = self.cfg.default_deadline_ms
+            deadline = (t_submit + deadline_ms / 1e3
+                        if deadline_ms is not None else None)
+            req = Request(user_ids=ids, tenant=tenant, ticket=Ticket(),
+                          t_submit=t_submit, deadline=deadline, span=root)
+            try:
+                if self.cfg.policy == "shed":
+                    self._queue.put_nowait(req)
+                else:
+                    self._queue.put(req)
+            except queue_mod.Full:
+                self.telemetry.bump("shed")
+                admit.set(outcome="shed")
+                root.end(outcome="shed")
+                raise RequestShed(
+                    f"admission queue full ({self.cfg.queue_size} "
+                    f"requests); policy=shed rejects instead of queueing "
+                    f"further") from None
         return req.ticket
 
     def __call__(self, user_ids, tenant: str = "default",
@@ -195,13 +212,16 @@ class Frontdoor:
         drain the in-flight batch (dispatch lock), swap/repoint/attach
         in the registry, invalidate the tenant's cache shard. Returns
         the registry's swap record plus the measured full pause."""
-        t0 = time.perf_counter()
-        with self._dispatch_lock:
-            t_drained = time.perf_counter()
-            out = self.registry.swap(tenant, artifact)
-            if self._cache is not None:
-                out["cache_invalidated"] = self._cache.invalidate(tenant)
-        pause_ms = (time.perf_counter() - t0) * 1e3
+        t0 = clock.now()
+        with self.tracer.span("frontdoor_swap", tenant=tenant) as sp:
+            with self._dispatch_lock:
+                t_drained = clock.now()
+                self.tracer.record_span("drain", t0, t_drained, parent=sp)
+                with self.tracer.span("registry_swap", parent=sp):
+                    out = self.registry.swap(tenant, artifact)
+                if self._cache is not None:
+                    out["cache_invalidated"] = self._cache.invalidate(tenant)
+        pause_ms = (clock.now() - t0) * 1e3
         self.telemetry.swap_pause.record(pause_ms)
         self.telemetry.bump("swaps")
         out["pause_ms"] = round(pause_ms, 3)

@@ -1,0 +1,36 @@
+"""repro.obs — the one observability layer everything emits through.
+
+Three pieces (ISSUE 10):
+
+  * :mod:`repro.obs.trace` — spans + trace IDs; context-managed live
+    spans, retroactive cross-thread spans, head sampling, a no-op
+    disabled mode, and a ``jax.profiler.TraceAnnotation`` bridge so
+    host spans land inside device profiles.
+  * :mod:`repro.obs.metrics` — counters, gauges, bounded-memory
+    geometric histograms, and the capped :class:`LatencyRecorder`
+    the serve-layer telemetry classes are built on.
+  * :mod:`repro.obs.export` / :mod:`repro.obs.report` — schema-versioned
+    JSONL trace export and the tree/rollup renderer behind
+    ``python -m repro.launch.obs_report``.
+
+``repro.obs.clock.now()`` is the repo-wide monotonic clock; raw
+``time.perf_counter()`` latency bookkeeping outside this package is
+forbidden by a grep rule in ``tests/test_obs.py``.
+
+This package never imports jax at module load (the solver's dryrun path
+must set XLA flags before any backend initialization).
+"""
+from .clock import ms_between, now, wall
+from .export import SCHEMA_VERSION, export_jsonl, span_to_dict
+from .metrics import (Counter, CounterSet, Gauge, Histogram,
+                      LatencyRecorder, MetricsRegistry)
+from .trace import (NULL_SPAN, Span, Tracer, configure, get_tracer,
+                    set_tracer)
+
+__all__ = [
+    "now", "wall", "ms_between",
+    "Counter", "CounterSet", "Gauge", "Histogram", "LatencyRecorder",
+    "MetricsRegistry",
+    "Span", "Tracer", "NULL_SPAN", "get_tracer", "set_tracer", "configure",
+    "SCHEMA_VERSION", "export_jsonl", "span_to_dict",
+]

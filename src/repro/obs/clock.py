@@ -1,0 +1,43 @@
+"""The one monotonic clock every latency number in the repo reads.
+
+All host-side timing — span durations, queue-delay arithmetic, swap
+pauses, solver sweep telemetry — goes through :func:`now` so every
+timestamp in the system is comparable (a request's submit time recorded
+on the caller's thread is subtracted from a dispatch time recorded on
+the batcher thread). ``tests/test_obs.py`` greps ``time.perf_counter``
+out of every ``src/repro`` module except ``repro/obs`` — ad-hoc latency
+bookkeeping bypasses the tracer/metrics layer and is how the three
+disjoint pre-PR telemetry classes happened in the first place.
+
+Deadline and pacing arithmetic (the batcher's flush window, the
+open-loop generator's arrival schedule) uses the same clock: a deadline
+computed from one clock and checked against another is a latent bug,
+not a style choice.
+"""
+from __future__ import annotations
+
+import time
+
+__all__ = ["now", "wall", "ms_between"]
+
+# bound at import: one attribute lookup per call, and monkeypatching
+# time.perf_counter later cannot split the repo across two clocks
+_perf = time.perf_counter
+_wall = time.time
+
+
+def now() -> float:
+    """Monotonic seconds (high resolution); the repo-wide timestamp."""
+    return _perf()
+
+
+def wall() -> float:
+    """Wall-clock epoch seconds — ONLY for anchoring exported traces to
+    calendar time (correlating with external logs / device profiles);
+    never for measuring durations."""
+    return _wall()
+
+
+def ms_between(t0: float, t1: float) -> float:
+    """Milliseconds between two :func:`now` readings."""
+    return (t1 - t0) * 1e3

@@ -1,0 +1,340 @@
+"""Bounded-memory metrics: counters, gauges, histograms, one registry.
+
+Every long-lived measurement object in the repo is O(1) in the number
+of observations — a serving process that records a latency per request
+must not grow a ``List[float]`` forever (the pre-PR ``LatencyRecorder``
+did exactly that; a week at 150 QPS is ~700 MB of floats).
+
+  * :class:`Counter` / :class:`CounterSet` — monotone event counts.
+  * :class:`Gauge` — a last-written value (queue depth, device bytes).
+  * :class:`Histogram` — geometric fixed-bucket value distribution:
+    ~5% relative bucket width over [1e-4, 1e7], constant memory,
+    percentiles by within-bucket geometric interpolation clamped to the
+    observed min/max.
+  * :class:`LatencyRecorder` — the repo-wide latency primitive: a ring
+    of the newest ``cap`` raw samples (exact percentiles while the
+    recorder has seen at most ``cap`` values — which keeps every pinned
+    ``summary()`` byte-identical to the pre-histogram implementation —
+    plus recent-sample debugging forever) feeding a Histogram that
+    answers percentiles once the raw window has been outgrown.
+  * :class:`MetricsRegistry` — get-or-create by name + one
+    ``snapshot()`` of everything, the metrics side of an obs export.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = ["Counter", "CounterSet", "Gauge", "Histogram",
+           "LatencyRecorder", "MetricsRegistry"]
+
+
+class Counter:
+    """Monotone event counter."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += int(n)
+
+
+class Gauge:
+    """Last-written value (plus the running extremes)."""
+
+    __slots__ = ("value", "min", "max", "writes")
+
+    def __init__(self):
+        self.value = float("nan")
+        self.min = float("inf")
+        self.max = float("-inf")
+        self.writes = 0
+
+    def set(self, v: float) -> None:
+        v = float(v)
+        self.value = v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        self.writes += 1
+
+
+class CounterSet:
+    """A named family of monotone counters with a dict-like read view
+    (``telemetry.counters["swaps"]`` keeps working across the
+    migration). Insertion-ordered, so ``dict(cs)`` round-trips the
+    declaration order summaries were pinned against."""
+
+    def __init__(self, names=()):
+        self._c: Dict[str, int] = {str(n): 0 for n in names}
+
+    def bump(self, name: str, n: int = 1) -> None:
+        self._c[name] = self._c.get(name, 0) + int(n)
+
+    def get(self, name: str, default: int = 0) -> int:
+        return self._c.get(name, default)
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self._c)
+
+    def __getitem__(self, name: str) -> int:
+        return self._c[name]
+
+    def __iter__(self):
+        return iter(self._c)
+
+    def keys(self):
+        return self._c.keys()
+
+    def items(self):
+        return self._c.items()
+
+    def __len__(self) -> int:
+        return len(self._c)
+
+
+class Histogram:
+    """Geometric fixed-bucket histogram: constant memory at any count.
+
+    Buckets span [lo, hi) with width factor ``growth`` (defaults: 1e-4
+    to 1e7 at 1.1 — ~260 buckets, <5% relative quantile error), plus an
+    underflow and an overflow bucket. Exact count/total/min/max are
+    tracked alongside, so means are exact and percentile estimates are
+    clamped into the observed range (a one-sample histogram reports
+    that sample, not a bucket edge).
+    """
+
+    def __init__(self, lo: float = 1e-4, hi: float = 1e7,
+                 growth: float = 1.1):
+        if not (lo > 0 and hi > lo and growth > 1):
+            raise ValueError("need 0 < lo < hi and growth > 1")
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self._log_growth = math.log(growth)
+        self._n_buckets = int(math.ceil(
+            math.log(hi / lo) / self._log_growth))
+        # [underflow] + n regular + [overflow]
+        self._counts = np.zeros(self._n_buckets + 2, np.int64)
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def _index(self, v: float) -> int:
+        if v < self.lo:
+            return 0
+        if v >= self.hi:
+            return self._n_buckets + 1
+        return 1 + int(math.log(v / self.lo) / self._log_growth)
+
+    def _edge(self, i: int) -> float:
+        """Lower edge of regular bucket i (0-based among regular)."""
+        return self.lo * math.exp(i * self._log_growth)
+
+    def record(self, v: float) -> None:
+        v = float(v)
+        self._counts[self._index(v)] += 1
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def record_many(self, values) -> None:
+        """Vectorized :meth:`record` — the 1M-sample path."""
+        v = np.asarray(values, np.float64).ravel()
+        if v.size == 0:
+            return
+        idx = np.ones(v.shape, np.int64)
+        small, big = v < self.lo, v >= self.hi
+        mid = ~(small | big)
+        idx[small] = 0
+        idx[big] = self._n_buckets + 1
+        with np.errstate(divide="ignore"):
+            idx[mid] = 1 + np.floor(
+                np.log(v[mid] / self.lo) / self._log_growth).astype(np.int64)
+        self._counts += np.bincount(idx, minlength=self._counts.size)
+        self.count += int(v.size)
+        self.total += float(v.sum())
+        self.min = min(self.min, float(v.min()))
+        self.max = max(self.max, float(v.max()))
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else float("nan")
+
+    def percentile(self, q: float) -> float:
+        """Estimated q-th percentile (q in [0, 100]): find the bucket
+        holding the rank, interpolate geometrically inside it, clamp to
+        the exact observed [min, max]."""
+        if self.count == 0:
+            return float("nan")
+        rank = (q / 100.0) * (self.count - 1)
+        cum = np.cumsum(self._counts)
+        b = int(np.searchsorted(cum, rank, side="right"))
+        b = min(b, self._counts.size - 1)
+        if b == 0:                        # underflow bucket: below lo
+            est = min(self.lo, self.max)
+        elif b == self._counts.size - 1:  # overflow bucket: beyond hi
+            est = self.max
+        else:
+            lo_edge = self._edge(b - 1)
+            hi_edge = self._edge(b)
+            prev = float(cum[b - 1])
+            inside = float(self._counts[b])
+            frac = ((rank - prev) / inside) if inside > 0 else 0.0
+            est = lo_edge * (hi_edge / lo_edge) ** frac
+        return float(min(max(est, self.min), self.max))
+
+    def nbytes(self) -> int:
+        return int(self._counts.nbytes) + 64
+
+    def snapshot(self) -> dict:
+        return {"count": self.count,
+                "mean": round(self.mean, 4) if self.count else float("nan"),
+                "p50": round(self.percentile(50), 4),
+                "p99": round(self.percentile(99), 4),
+                "min": self.min if self.count else float("nan"),
+                "max": self.max if self.count else float("nan")}
+
+
+class LatencyRecorder:
+    """Accumulates per-request latencies (milliseconds) in bounded
+    memory.
+
+    The raw buffer is a ring of the newest ``cap`` samples. While the
+    recorder has seen at most ``cap`` values the ring holds *all* of
+    them and ``percentile`` is the exact ``np.percentile`` the pre-obs
+    implementation computed (pinned summaries stay byte-identical);
+    past ``cap`` the ring keeps rotating for debugging and percentiles
+    come from the geometric histogram — memory stays fixed at any
+    count (the 1M-record regression test in tests/test_obs.py).
+    """
+
+    def __init__(self, cap: int = 4096):
+        if cap < 2:
+            raise ValueError("cap must be >= 2")
+        self.cap = int(cap)
+        self._ring = deque(maxlen=self.cap)
+        self._hist = Histogram()
+
+    def record(self, ms: float) -> None:
+        ms = float(ms)
+        self._ring.append(ms)
+        self._hist.record(ms)
+
+    def record_many(self, values) -> None:
+        v = np.asarray(values, np.float64).ravel()
+        self._ring.extend(v[-self.cap:].tolist())
+        self._hist.record_many(v)
+
+    @property
+    def count(self) -> int:
+        return self._hist.count
+
+    @property
+    def mean(self) -> float:
+        return self._hist.mean
+
+    def percentile(self, q: float) -> float:
+        if self.count == 0:
+            return float("nan")
+        if self.count <= self.cap:        # ring holds every sample: exact
+            return float(np.percentile(np.asarray(self._ring), q))
+        return self._hist.percentile(q)
+
+    def values(self) -> np.ndarray:
+        """The newest <= cap raw samples (debugging / tests)."""
+        return np.asarray(self._ring, np.float64)
+
+    def nbytes(self) -> int:
+        # deque of python floats: pointer + float object per slot
+        return self.cap * 40 + self._hist.nbytes() + 64
+
+    def summary(self) -> dict:
+        return {"requests": self.count,
+                "p50_ms": round(self.percentile(50), 3),
+                "p99_ms": round(self.percentile(99), 3)}
+
+
+class MetricsRegistry:
+    """Get-or-create metric objects by name + one snapshot of all.
+
+    The registry is how an observability export (``repro.obs.export``)
+    or a bench record picks up *every* metric a subsystem kept, without
+    each call site enumerating them. Names are unique across kinds —
+    asking for an existing name with a different kind raises.
+    """
+
+    def __init__(self):
+        self._metrics: Dict[str, object] = {}
+
+    def _get_or_create(self, name: str, cls, factory):
+        m = self._metrics.get(name)
+        if m is None:
+            m = factory()
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get_or_create(name, Counter, Counter)
+
+    def counter_set(self, name: str, names=()) -> CounterSet:
+        return self._get_or_create(name, CounterSet,
+                                   lambda: CounterSet(names))
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get_or_create(name, Gauge, Gauge)
+
+    def histogram(self, name: str, **kw) -> Histogram:
+        return self._get_or_create(name, Histogram, lambda: Histogram(**kw))
+
+    def latency(self, name: str, cap: int = 4096) -> LatencyRecorder:
+        return self._get_or_create(name, LatencyRecorder,
+                                   lambda: LatencyRecorder(cap))
+
+    def register(self, name: str, metric) -> object:
+        if name in self._metrics and self._metrics[name] is not metric:
+            raise ValueError(f"metric {name!r} already registered")
+        self._metrics[name] = metric
+        return metric
+
+    def get(self, name: str) -> Optional[object]:
+        return self._metrics.get(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def names(self):
+        return tuple(self._metrics)
+
+    def snapshot(self) -> dict:
+        """{name: scalar | summary dict} for every registered metric."""
+        out = {}
+        for name, m in self._metrics.items():
+            if isinstance(m, Counter):
+                out[name] = m.value
+            elif isinstance(m, Gauge):
+                out[name] = {"value": m.value, "min": m.min, "max": m.max,
+                             "writes": m.writes}
+            elif isinstance(m, CounterSet):
+                out[name] = m.as_dict()
+            elif isinstance(m, (Histogram, LatencyRecorder)):
+                h = m if isinstance(m, Histogram) else m._hist
+                out[name] = h.snapshot()
+            else:                        # duck-typed: anything w/ snapshot
+                snap = getattr(m, "snapshot", None)
+                out[name] = snap() if callable(snap) else repr(m)
+        return out
+
+    def nbytes(self) -> int:
+        return sum(int(m.nbytes()) if hasattr(m, "nbytes") else 64
+                   for m in self._metrics.values()) + 64

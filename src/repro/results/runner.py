@@ -30,6 +30,14 @@ BenchRun owns the shared flags (``--json --out --store --no-store
 ``--profile`` wraps any section passed through :meth:`profile` in a
 ``jax.profiler`` trace capture to a per-run directory; the directories
 are recorded on the emitted record.
+
+``--trace`` turns on the global ``repro.obs`` tracer for the run
+(``--trace-sample`` sets the per-trace sampling rate); :meth:`emit`
+then exports the collected spans to a schema-versioned JSONL file
+(``--trace-out``, default ``traces/<bench>.jsonl``) and attaches its
+path + per-span-name rollup to the record under ``extra["obs"]``.
+Combined with ``--profile``, host spans also appear inside the device
+profile via the tracer's ``jax.profiler.TraceAnnotation`` bridge.
 """
 from __future__ import annotations
 
@@ -81,6 +89,15 @@ class BenchRun:
                             "bench's hot sections")
         g.add_argument("--profile-dir", default="profiles",
                        help="root directory for --profile trace capture")
+        g.add_argument("--trace", action="store_true",
+                       help="enable repro.obs span tracing for the run "
+                            "and export a JSONL trace at emit time")
+        g.add_argument("--trace-out", default=None,
+                       help="trace export path (default: "
+                            "traces/%s.jsonl)" % bench)
+        g.add_argument("--trace-sample", type=float, default=1.0,
+                       help="fraction of traces to keep under --trace "
+                            "(head sampling; default 1.0)")
         self.args = None
         self.trace_dirs = []
         self._fp = None
@@ -91,6 +108,9 @@ class BenchRun:
 
     def parse(self, argv=None) -> argparse.Namespace:
         self.args = self.parser.parse_args(argv)
+        if self.args.trace:
+            from repro.obs import configure
+            configure(enabled=True, sample_rate=self.args.trace_sample)
         return self.args
 
     def _require_args(self):
@@ -147,6 +167,23 @@ class BenchRun:
               flush=True)
         return jax.profiler.trace(path)
 
+    # -- obs trace export -----------------------------------------------
+    def _export_trace(self):
+        """Under --trace: drain the global tracer to --trace-out and
+        return the record annotation ({trace_file, n_spans, span_rollup});
+        None otherwise."""
+        if not getattr(self.args, "trace", False):
+            return None
+        from repro.obs import export_jsonl, get_tracer
+        from repro.obs.report import read_trace, rollup
+        path = self.args.trace_out or os.path.join(
+            "traces", f"{self.bench}.jsonl")
+        n = export_jsonl(get_tracer(), path, drain=True)
+        print(f"[{self.bench}] trace -> {path} ({n} spans)",
+              file=sys.stderr, flush=True)
+        return {"trace_file": path, "n_spans": n,
+                "span_rollup": rollup(read_trace(path)["spans"])}
+
     # -- emission -------------------------------------------------------
     def emit(self, config: dict, metrics: dict, payload) -> dict:
         """Record a finished measurement: append to the store, mirror
@@ -156,6 +193,9 @@ class BenchRun:
         extra = {}
         if self.trace_dirs:
             extra["profile_trace_dirs"] = list(self.trace_dirs)
+        obs_extra = self._export_trace()
+        if obs_extra:
+            extra["obs"] = obs_extra
         rec = make_record(self.bench, config, metrics, payload=payload,
                           fp=self._fingerprint(), extra=extra)
         store = self.store

@@ -21,12 +21,12 @@ exists to prevent — and serving results leave the device anyway.
 """
 from __future__ import annotations
 
-import time
 from typing import Sequence
 
 import jax
 import numpy as np
 
+from repro.obs import clock
 from repro.serve.telemetry import LatencyRecorder
 
 __all__ = ["BatchDispatcher", "DEFAULT_BUCKETS", "chunk_plan"]
@@ -86,7 +86,7 @@ class BatchDispatcher:
         to the true size (chunked through the top bucket when oversized)."""
         user_ids = np.asarray(user_ids, np.int32)
         n = int(user_ids.shape[0])
-        t0 = time.perf_counter()
+        t0 = clock.now()
         outs = []
         start = 0
         for m, bucket in chunk_plan(n, self.buckets):
@@ -99,7 +99,7 @@ class BatchDispatcher:
                 lambda x, m=m: np.asarray(x)[:m], out))
             self._bucket_counts[bucket] += 1
             start += m
-        self._lat.record((time.perf_counter() - t0) * 1e3)
+        self._lat.record((clock.now() - t0) * 1e3)
         if len(outs) == 1:
             return outs[0]
         return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *outs)

@@ -22,7 +22,6 @@ batch sizes with a bounded number of compiles.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
@@ -30,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import pad_rung as _cap_rung
+from repro.obs import clock
+from repro.obs.trace import get_tracer
 from repro.embedding import (dequantize_params, fused_topk,
                              normalize_backend, params_quantized)
 from repro.serve.telemetry import (LatencyRecorder, StreamTelemetry,
@@ -291,25 +292,28 @@ class RecsysSession(Session):
         swap that outgrows a rung re-plans the ladder and recompiles
         once (counted as a capacity bump). Returns the swap stats.
         """
-        t0 = time.perf_counter()
-        mcfg = dataclasses.replace(
-            artifact.mcfg(), lookup_backend=self.mcfg.lookup_backend)
-        params, statics = artifact.serving_params(), artifact.statics()
-        bumped = False
-        if self._caps is not None:
-            try:
-                params, statics, mcfg = _pad_state(params, statics, mcfg,
-                                                   self._caps)
-            except ValueError:          # outgrew a rung: bump the ladder
-                self._caps = capacity_plan(mcfg, statics, **self._caps)
-                params, statics, mcfg = _pad_state(params, statics, mcfg,
-                                                   self._caps)
-                bumped = True
-                self._stream.bump("capacity_bumps")
-        self._install(params, statics, mcfg)
-        self.swap_epoch += 1
-        self.artifact_id = artifact.content_id()
-        ms = (time.perf_counter() - t0) * 1e3
+        t0 = clock.now()
+        with get_tracer().span("session_swap",
+                               artifact=artifact.content_id()) as span:
+            mcfg = dataclasses.replace(
+                artifact.mcfg(), lookup_backend=self.mcfg.lookup_backend)
+            params, statics = artifact.serving_params(), artifact.statics()
+            bumped = False
+            if self._caps is not None:
+                try:
+                    params, statics, mcfg = _pad_state(params, statics,
+                                                       mcfg, self._caps)
+                except ValueError:      # outgrew a rung: bump the ladder
+                    self._caps = capacity_plan(mcfg, statics, **self._caps)
+                    params, statics, mcfg = _pad_state(params, statics,
+                                                       mcfg, self._caps)
+                    bumped = True
+                    self._stream.bump("capacity_bumps")
+            self._install(params, statics, mcfg)
+            self.swap_epoch += 1
+            self.artifact_id = artifact.content_id()
+            ms = (clock.now() - t0) * 1e3
+            span.set(ms=round(ms, 3), capacity_bumped=bumped)
         self._stream.swap.record(ms)
         return {"ms": round(ms, 3), "capacity_bumped": bumped,
                 "capacity": dict(self._caps) if self._caps else None}
@@ -324,10 +328,10 @@ class RecsysSession(Session):
         """user_ids int32 [B] -> (values [B,k], item_ids [B,k])."""
         user_ids = jnp.asarray(user_ids, jnp.int32)
         self._shapes.add(int(user_ids.shape[0]))
-        t0 = time.perf_counter()
+        t0 = clock.now()
         out = self._fn(self.params, self.statics, user_ids)
         jax.block_until_ready(out)
-        self._lat.record((time.perf_counter() - t0) * 1e3)
+        self._lat.record((clock.now() - t0) * 1e3)
         return out
 
     @property
@@ -387,10 +391,10 @@ class ArchSession(Session):
     def __call__(self):
         if not self._warm:
             self.warmup()
-        t0 = time.perf_counter()
+        t0 = clock.now()
         out = self._fn(*self._args)
         jax.block_until_ready(out)
-        self._lat.record((time.perf_counter() - t0) * 1e3)
+        self._lat.record((clock.now() - t0) * 1e3)
         self._args = self.cell.next_args(self._args, out)
         return out
 

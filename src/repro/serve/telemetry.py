@@ -16,39 +16,24 @@ batch-fill ratio and per-bucket occupancy (how well the continuous
 batcher packs the ladder), shed/timeout/cache counters, and the
 swap-under-load pause (drain wait + device swap — the number PR 5's
 idle swap p99 could not measure).
+
+As of the obs layer (ISSUE 10), every measurement primitive here comes
+from :mod:`repro.obs.metrics` and is bounded-memory: ``LatencyRecorder``
+is a capped ring + geometric histogram (exact percentiles up to its
+cap, then histogram estimates — a serving process no longer grows a
+float list per request), counters live in a :class:`CounterSet` that
+still reads like the plain dict tests pin (``counters["swaps"]``), and
+both telemetry classes hang off a :class:`MetricsRegistry` so an obs
+export can snapshot everything at once. ``summary()`` keys and rounding
+are unchanged.
 """
 from __future__ import annotations
 
-from typing import List
-
-import numpy as np
+from repro.obs.metrics import (CounterSet, LatencyRecorder,
+                               MetricsRegistry)
 
 __all__ = ["LatencyRecorder", "StreamTelemetry", "FrontdoorTelemetry",
            "compile_count"]
-
-
-class LatencyRecorder:
-    """Accumulates per-request latencies (milliseconds)."""
-
-    def __init__(self):
-        self._ms: List[float] = []
-
-    def record(self, ms: float) -> None:
-        self._ms.append(float(ms))
-
-    @property
-    def count(self) -> int:
-        return len(self._ms)
-
-    def percentile(self, q: float) -> float:
-        if not self._ms:
-            return float("nan")
-        return float(np.percentile(np.asarray(self._ms), q))
-
-    def summary(self) -> dict:
-        return {"requests": self.count,
-                "p50_ms": round(self.percentile(50), 3),
-                "p99_ms": round(self.percentile(99), 3)}
 
 
 class StreamTelemetry:
@@ -61,27 +46,34 @@ class StreamTelemetry:
     """
 
     def __init__(self):
-        self.swap = LatencyRecorder()         # ms per RecsysSession.swap
-        self._churn: List[float] = []         # per-refresh label churn
-        self.counters = {"appends": 0, "new_edges": 0, "cold_users": 0,
-                         "cold_items": 0, "refreshes": 0,
-                         "capacity_bumps": 0}
+        self.registry = MetricsRegistry()
+        self.swap = self.registry.latency("swap_ms")  # per session.swap
+        self.counters = self.registry.counter_set(
+            "stream", ("appends", "new_edges", "cold_users",
+                       "cold_items", "refreshes", "capacity_bumps"))
+        # per-refresh label churn: running mean + last, not a list
+        self._churn_sum = 0.0
+        self._churn_n = 0
+        self._churn_last = float("nan")
 
     def bump(self, name: str, n: int = 1) -> None:
-        self.counters[name] = self.counters.get(name, 0) + int(n)
+        self.counters.bump(name, n)
 
     def record_churn(self, fraction: float) -> None:
-        self._churn.append(float(fraction))
+        f = float(fraction)
+        self._churn_sum += f
+        self._churn_n += 1
+        self._churn_last = f
 
     def summary(self) -> dict:
-        out = dict(self.counters)
+        out = self.counters.as_dict()
         out["swaps"] = self.swap.count
         out["swap_p50_ms"] = round(self.swap.percentile(50), 3)
         out["swap_p99_ms"] = round(self.swap.percentile(99), 3)
-        out["churn_mean"] = (round(float(np.mean(self._churn)), 4)
-                             if self._churn else float("nan"))
-        out["churn_last"] = (round(self._churn[-1], 4)
-                             if self._churn else float("nan"))
+        out["churn_mean"] = (round(self._churn_sum / self._churn_n, 4)
+                             if self._churn_n else float("nan"))
+        out["churn_last"] = (round(self._churn_last, 4)
+                             if self._churn_n else float("nan"))
         return out
 
 
@@ -104,38 +96,43 @@ class FrontdoorTelemetry:
     """
 
     def __init__(self):
-        self.e2e = LatencyRecorder()
-        self.queue_delay = LatencyRecorder()
-        self.swap_pause = LatencyRecorder()
-        self._fill: List[float] = []
+        self.registry = MetricsRegistry()
+        self.e2e = self.registry.latency("e2e_ms")
+        self.queue_delay = self.registry.latency("queue_delay_ms")
+        self.swap_pause = self.registry.latency("swap_pause_ms")
+        self.counters = self.registry.counter_set(
+            "frontdoor", ("requests", "responses", "batches", "coalesced",
+                          "shed", "timeouts", "cache_hits", "swaps",
+                          "errors"))
+        # batch-fill ratio: running mean, not a per-batch list
+        self._fill_sum = 0.0
+        self._fill_n = 0
         self.bucket_counts: dict = {}
-        self.counters = {"requests": 0, "responses": 0, "batches": 0,
-                         "coalesced": 0, "shed": 0, "timeouts": 0,
-                         "cache_hits": 0, "swaps": 0, "errors": 0}
 
     def bump(self, name: str, n: int = 1) -> None:
-        self.counters[name] = self.counters.get(name, 0) + int(n)
+        self.counters.bump(name, n)
 
     def record_batch(self, n_requests: int, n_ids: int, n_padded: int,
                      buckets_used) -> None:
         """One dispatched batch: ``n_requests`` coalesced requests
         totalling ``n_ids`` real rows, padded to ``n_padded`` rows
         across ``buckets_used`` ladder rungs."""
-        self.counters["batches"] += 1
+        self.counters.bump("batches")
         if n_requests > 1:
-            self.counters["coalesced"] += n_requests
-        self._fill.append(n_ids / max(n_padded, 1))
+            self.counters.bump("coalesced", n_requests)
+        self._fill_sum += n_ids / max(n_padded, 1)
+        self._fill_n += 1
         for b in buckets_used:
             self.bucket_counts[int(b)] = self.bucket_counts.get(int(b), 0) + 1
 
     def summary(self) -> dict:
-        out = dict(self.counters)
+        out = self.counters.as_dict()
         out["e2e_p50_ms"] = round(self.e2e.percentile(50), 3)
         out["e2e_p99_ms"] = round(self.e2e.percentile(99), 3)
         out["queue_delay_p50_ms"] = round(self.queue_delay.percentile(50), 3)
         out["queue_delay_p99_ms"] = round(self.queue_delay.percentile(99), 3)
-        out["batch_fill_mean"] = (round(float(np.mean(self._fill)), 4)
-                                  if self._fill else float("nan"))
+        out["batch_fill_mean"] = (round(self._fill_sum / self._fill_n, 4)
+                                  if self._fill_n else float("nan"))
         out["bucket_counts"] = dict(sorted(self.bucket_counts.items()))
         out["swap_pause_p50_ms"] = round(self.swap_pause.percentile(50), 3)
         out["swap_pause_p99_ms"] = round(self.swap_pause.percentile(99), 3)

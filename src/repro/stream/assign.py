@@ -23,12 +23,13 @@ partition cannot contain, so no accidental merges.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional, Tuple
 
 import numpy as np
 
 from repro.core import ClusterEngine, make_weights
+from repro.obs import clock
+from repro.obs.trace import get_tracer
 from repro.core.graph import BipartiteGraph
 from repro.core import solver_jax
 
@@ -120,17 +121,19 @@ class ColdStartAssigner:
         labels = np.asarray(labels, np.int32)
         if n_new_users == 0 and n_new_items == 0:
             return labels, AssignStats(0, 0, 0, 0, 0.0)
-        t0 = time.perf_counter()
-        wu, wv = make_weights(graph, self.scheme)
-        cand = None
-        if self.engine.candidates == "minhash":
-            from repro.core.candidates import cold_candidate_sets
-            cand = cold_candidate_sets(graph, labels, n_new_users,
-                                       n_new_items)
-        out = solver_jax.lp_cold_assign(graph, labels, wu, wv, self.gamma,
-                                        n_new_users, n_new_items,
-                                        cand_labels=cand)
-        ms = (time.perf_counter() - t0) * 1e3
+        t0 = clock.now()
+        with get_tracer().span("cold_assign", n_new_users=int(n_new_users),
+                               n_new_items=int(n_new_items)):
+            wu, wv = make_weights(graph, self.scheme)
+            cand = None
+            if self.engine.candidates == "minhash":
+                from repro.core.candidates import cold_candidate_sets
+                cand = cold_candidate_sets(graph, labels, n_new_users,
+                                           n_new_items)
+            out = solver_jax.lp_cold_assign(graph, labels, wu, wv,
+                                            self.gamma, n_new_users,
+                                            n_new_items, cand_labels=cand)
+        ms = (clock.now() - t0) * 1e3
         nu = graph.n_users
         moved_u = int(np.sum(out[nu - n_new_users:nu]
                              != labels[nu - n_new_users:nu]))
@@ -184,7 +187,7 @@ class ColdStartAssigner:
         """
         from repro.core.metrics import bipartite_modularity
         labels = np.asarray(labels, np.int32)
-        t0 = time.perf_counter()
+        t0 = clock.now()
         solve_graph = graph
         if self.engine.candidates == "minhash":
             from repro.core.candidates import prune_graph
@@ -197,8 +200,9 @@ class ColdStartAssigner:
         best = None
         seed = labels
         for g in gammas:
-            new, iters = self._solve(solve_graph, wu, wv, g, budget,
-                                     max_iters, seed)
+            with get_tracer().span("refresh_probe", gamma=float(g)):
+                new, iters = self._solve(solve_graph, wu, wv, g, budget,
+                                         max_iters, seed)
             seed = new                  # fine -> coarse warm chain
             if primary is None:
                 primary = (new, iters, g)
@@ -210,7 +214,7 @@ class ColdStartAssigner:
                 best = (q, new, iters, g)
         new, iters, g_best = (best[1:] if best is not None else primary)
         self.gamma = float(g_best)
-        ms = (time.perf_counter() - t0) * 1e3
+        ms = (clock.now() - t0) * 1e3
         churn_u = float(np.mean(new[:nu] != labels[:nu])) if nu else 0.0
         churn_v = float(np.mean(new[nu:] != labels[nu:])) \
             if graph.n_items else 0.0

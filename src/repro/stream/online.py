@@ -36,6 +36,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import ClusterEngine
+from repro.obs.trace import get_tracer
 from repro.core.sketch import Sketch
 
 from .assign import AssignStats, ColdStartAssigner, RefreshStats, \
@@ -274,9 +275,11 @@ class StreamUpdater:
                      edge_u, edge_v) -> Dict[str, object]:
         """One event batch: grow, append, cold-assign, re-map."""
         old_nu, old_nv = self.sgraph.n_users, self.sgraph.n_items
-        self.sgraph.grow(old_nu + int(n_new_users),
-                         old_nv + int(n_new_items))
-        info = self.sgraph.append(edge_u, edge_v)
+        with get_tracer().span("graph_append", n_new_users=int(n_new_users),
+                               n_new_items=int(n_new_items)):
+            self.sgraph.grow(old_nu + int(n_new_users),
+                             old_nv + int(n_new_items))
+            info = self.sgraph.append(edge_u, edge_v)
         nu, nv = self.sgraph.n_users, self.sgraph.n_items
         labels = grow_labels(self.labels, old_nu, old_nv, nu, nv)
         su = np.concatenate([self.su, labels[old_nu:nu]])

@@ -15,11 +15,12 @@ bundle is what crosses the wire. The session is only ever touched via
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import clock
+from repro.obs.trace import get_tracer
 from repro.serve.telemetry import StreamTelemetry
 
 __all__ = ["ReplayConfig", "replay"]
@@ -49,9 +50,12 @@ def replay(updater, steps: Sequence, session=None,
     rng = np.random.default_rng(cfg.seed)
     prev_art = updater.export_artifact()
     assign_ms, refresh_ms, tune_ms, delta_bytes = [], [], [], []
+    tracer = get_tracer()
     for t, step in enumerate(steps):
-        out = updater.apply_events(step.n_new_users, step.n_new_items,
-                                   step.edge_u, step.edge_v)
+        step_span = tracer.trace("stream_step", step=t)
+        with tracer.span("apply_events", parent=step_span):
+            out = updater.apply_events(step.n_new_users, step.n_new_items,
+                                       step.edge_u, step.edge_v)
         info, stats = out["append"], out["assign"]
         tele.bump("appends")
         tele.bump("new_edges", info.n_new_edges)
@@ -62,24 +66,29 @@ def replay(updater, steps: Sequence, session=None,
                 f"+{info.n_new_edges}e cold-assign {stats.ms:.1f}ms "
                 f"(adopted {stats.adopted_users}u/{stats.adopted_items}i)")
         if cfg.refresh_every and (t + 1) % cfg.refresh_every == 0:
-            rstats = updater.refresh()
+            with tracer.span("refresh", parent=step_span):
+                rstats = updater.refresh()
             tele.bump("refreshes")
             tele.record_churn((rstats.churn_users + rstats.churn_items) / 2)
             refresh_ms.append(rstats.ms)
-            t0 = time.perf_counter()
+            t0 = clock.now()
             if cfg.tune_steps:
-                updater.tune(cfg.tune_steps)
-            tune_ms.append((time.perf_counter() - t0) * 1e3)
+                with tracer.span("tune", parent=step_span,
+                                 steps=cfg.tune_steps):
+                    updater.tune(cfg.tune_steps)
+            tune_ms.append((clock.now() - t0) * 1e3)
             line += (f" | refresh {rstats.iters} sweeps "
                      f"churn {rstats.churn_users:.2f}u/"
                      f"{rstats.churn_items:.2f}i {rstats.ms:.0f}ms "
                      f"tune {tune_ms[-1]:.0f}ms")
-        art = updater.export_artifact()
-        delta = art.delta(prev_art)
-        published = prev_art.apply_delta(delta)   # what the wire delivers
+        with tracer.span("export_delta", parent=step_span):
+            art = updater.export_artifact()
+            delta = art.delta(prev_art)
+            published = prev_art.apply_delta(delta)  # what the wire delivers
         delta_bytes.append(delta.nbytes())
         if session is not None:
-            swap = session.swap(published)
+            with tracer.span("swap", parent=step_span):
+                swap = session.swap(published)
             if tele is not session.telemetry:
                 # an explicitly supplied telemetry must still see the
                 # swaps the session recorded into its own counters
@@ -94,6 +103,7 @@ def replay(updater, steps: Sequence, session=None,
                                    cfg.request_batch)
                 session(ids)
         prev_art = published
+        step_span.end()
         if log:
             log(line)
     return {
